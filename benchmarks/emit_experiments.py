@@ -1,0 +1,44 @@
+"""Inject the roofline table from artifacts into EXPERIMENTS.md."""
+import glob
+import json
+import os
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+EXP = os.path.join(os.path.dirname(__file__), "..", "EXPERIMENTS.md")
+
+
+def table():
+    rows = ["| arch | shape | mesh | bound | peak GiB/dev | compute s | "
+            "memory s | collective s | useful | roofline frac |",
+            "|---|---|---|---|---|---|---|---|---|---|"]
+    for f in sorted(glob.glob(os.path.join(ART, "*.json"))):
+        r = json.load(open(f))
+        mesh = "single" if "single" in r["mesh"] else "multi"
+        if "skipped" in r:
+            rows.append(f"| {r['arch']} | {r['shape']} | {mesh} | SKIP "
+                        f"(full-attention) | | | | | | |")
+            continue
+        rl = r["roofline"]
+        peak = r["memory_analysis"]["peak_bytes_per_dev"] / 2 ** 30
+        q = " +msb4" if r.get("quantized") else ""
+        rows.append(
+            f"| {r['arch']}{q} | {r['shape']} | {mesh} | {rl['bottleneck']} "
+            f"| {peak:.1f} | {rl['compute_s']:.3f} | {rl['memory_s']:.3f} | "
+            f"{rl['collective_s']:.3f} | {rl['useful_flops_ratio']:.2f} | "
+            f"{rl['roofline_fraction']:.3f} |")
+    return "\n".join(rows)
+
+
+def main():
+    text = open(EXP).read()
+    marker = "<!-- ROOFLINE_TABLE -->"
+    if marker in text:
+        text = text.replace(marker, table(), 1)
+        open(EXP, "w").write(text)
+        print(f"injected {len(glob.glob(os.path.join(ART, '*.json')))} cells")
+    else:
+        print("marker not found (already injected?)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Roofline summary table from dry-run artifacts (deliverable g)."""
+import glob
+import json
+import os
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def load_cells(art_dir=ART):
+    cells = []
+    for f in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        cells.append(json.load(open(f)))
+    return cells
+
+
+def emit_summary(art_dir=ART):
+    cells = load_cells(art_dir)
+    if not cells:
+        print("\n### roofline_summary\nno artifacts — run "
+              "`PYTHONPATH=src python -m repro.launch.dryrun --all`")
+        return
+    print("\n### roofline_summary")
+    print("arch,shape,mesh,quantized,bound,peak_GiB_dev,compute_s,memory_s,"
+          "collective_s,useful_flops_ratio,roofline_fraction")
+    for r in cells:
+        if "skipped" in r:
+            print(f"{r['arch']},{r['shape']},{r['mesh']},,SKIP({r['skipped'][:40]})")
+            continue
+        rl = r["roofline"]
+        peak = r["memory_analysis"]["peak_bytes_per_dev"] / 2 ** 30
+        print(f"{r['arch']},{r['shape']},{r['mesh']},{r.get('quantized', False)},"
+              f"{rl['bottleneck']},{peak:.2f},{rl['compute_s']:.4f},"
+              f"{rl['memory_s']:.4f},{rl['collective_s']:.4f},"
+              f"{rl['useful_flops_ratio']:.3f},{rl['roofline_fraction']:.4f}")

@@ -1,0 +1,55 @@
+"""Benchmark runner — one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+
+Prints CSV blocks (``name,...`` header per section) and, when dry-run
+artifacts exist (artifacts/dryrun/*.json), the roofline summary table.
+"""
+import argparse
+import sys
+
+
+def _emit(name, rows):
+    print(f"\n### {name}")
+    for row in rows:
+        print(",".join(str(x) for x in row))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from . import tables
+
+    sections = [
+        ("table1_quality_markov_lm", tables.table1_quality),
+        ("table2_first_linear_mse", tables.table2_first_linear_mse),
+        ("table3_model_quant_time", tables.table3_model_quant_time),
+        ("table4_dp_vs_wgm", tables.table4_dp_vs_wgm),
+        ("table5_lambda_sweep", tables.table5_lambda_sweep),
+        ("table6_block_sweep", tables.table6_block_window_sweep),
+        ("table7_max_group_sweep", tables.table7_max_group_sweep),
+        ("table7b_window_sweep", tables.table7b_window_sweep),
+        ("figures2to5_size_sweep", tables.figures_size_sweep),
+        ("kernel_bench", tables.kernel_bench),
+    ]
+    for name, fn in sections:
+        if args.only and args.only not in name:
+            continue
+        try:
+            _emit(name, fn())
+        except Exception as e:  # noqa: BLE001 — a bench failure shouldn't hide others
+            _emit(name, [("ERROR", repr(e))])
+
+    # roofline summary from dry-run artifacts, if present
+    try:
+        from .roofline_report import emit_summary
+        emit_summary()
+    except Exception as e:  # noqa: BLE001
+        print(f"\n### roofline_summary\nunavailable: {e!r}")
+
+
+if __name__ == "__main__":
+    main()

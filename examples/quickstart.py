@@ -1,0 +1,62 @@
+"""Quickstart: MSB dynamic-grouping quantization in five minutes.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Quantizes a synthetic LLM-like weight matrix with every solver in the
+framework + the baselines the paper compares against, and prints the
+reconstruction-MSE / storage table (paper Table 2 structure).
+"""
+import time
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import (baselines, dequantize, quantize_blockwise,
+                        quantize_pertensor, reconstruction_mse,
+                        storage_bits_per_weight)
+
+
+def main():
+    rng = np.random.default_rng(0)
+    w = rng.standard_t(4, size=(512, 2048)).astype(np.float32)
+    w *= 0.02 / w.std()
+    print(f"weight: {w.shape}, heavy-tailed (student-t df=4), std 0.02\n")
+
+    rows = []
+
+    def add(name, fn, bits_eff=None):
+        t0 = time.perf_counter()
+        out = fn()
+        t = time.perf_counter() - t0
+        if hasattr(out, "codes"):
+            mse = float(reconstruction_mse(w, dequantize(out)))
+            bits = storage_bits_per_weight(out)
+        else:
+            mse = float(reconstruction_mse(w, out))
+            bits = bits_eff
+        rows.append((name, bits, t, mse))
+
+    # --- 4-bit block-wise (the paper's primary setting) ---
+    add("MSB-DP  (exact, vmapped)", lambda: quantize_blockwise(w, 4, solver="dp"))
+    add("MSB-WGM (paper Alg.3, CPU)", lambda: quantize_blockwise(w, 4, solver="wgm"))
+    add("RTN 4b/64", lambda: baselines.rtn_quantize(w, 4, 64), 6.0)
+    add("NF4 (BnB)", lambda: baselines.nf4_quantize(w, 4, 64), 4.5)
+    add("HQQ 4b/64", lambda: baselines.hqq_quantize(w, 4, 64), 8.25)
+    add("GPTQ 4b/64 (synthetic calib)", lambda: baselines.gptq_quantize(w, 4, 64), 4.5)
+
+    # --- 6-bit per-tensor ---
+    add("MSB-WDP 6b per-tensor", lambda: quantize_pertensor(w, 6, solver="wdp"))
+    add("RTN 6b per-tensor", lambda: baselines.rtn_quantize(w, 6, -1), 6.0)
+
+    print(f"{'method':32s} {'bits/wt':>8s} {'time':>8s} {'MSE':>12s}")
+    for name, bits, t, mse in rows:
+        b = f"{bits:.2f}" if bits else "-"
+        print(f"{name:32s} {b:>8s} {t:7.2f}s {mse:12.5f}")
+
+    print("\nMSB-DP is the exact optimum of the paper's objective — "
+          "vmapped over blocks it runs in milliseconds on TPU where the "
+          "paper's CPU oracle needed hours (Table 4).")
+
+
+if __name__ == "__main__":
+    main()

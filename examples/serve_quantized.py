@@ -1,0 +1,55 @@
+"""Serve a model with MSB 4-bit weights and compare against full precision.
+
+    PYTHONPATH=src python examples/serve_quantized.py
+
+Loads (here: inits + briefly trains) a small LM, quantizes-on-load with the
+framework policy, and serves the same batched requests from the fp and the
+4-bit engines, reporting agreement + the effective compression. On TPU the
+Pallas fused dequant-matmul kernel serves the packed int4 codes directly
+(kernels/msb_matmul); this CPU example uses simulation mode.
+"""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import smoke_config
+from repro.core import QuantPolicy, param_bits, quantize_params
+from repro.data import MarkovStream
+from repro.models import Model
+from repro.serve import ServeEngine
+from repro.train import AdamW, OptConfig, train_loop
+
+
+def main():
+    cfg = smoke_config("gemma2-2b")   # sliding-window + softcap features live
+    cfg = dataclasses.replace(cfg, vocab_size=128, vocab_round=128,
+                              d_model=128)
+    model = Model(cfg)
+    data = MarkovStream(cfg.vocab_size, 48, 8, seed=11)
+    opt = AdamW(OptConfig(lr=3e-3, warmup_steps=5, total_steps=60))
+    state, _ = train_loop(model, opt, iter(data), steps=50,
+                          rng=jax.random.PRNGKey(0), log_every=25)
+    params = state["params"]
+
+    qparams, report = quantize_params(
+        params, QuantPolicy(bits=4, block=64, solver="dp", min_size=2048))
+    print(f"[serve] quantized {len(report)} tensors; "
+          f"{param_bits(params) / 8e6:.2f} MB -> "
+          f"{param_bits(qparams) / 8e6:.2f} MB")
+
+    prompts = jnp.asarray(data.batch(999)["tokens"][:4, :12], jnp.int32)
+    eng_fp = ServeEngine(model, params, max_seq=96)
+    eng_q = ServeEngine(model, qparams, max_seq=96)
+    out_fp = np.asarray(eng_fp.generate(prompts, n_tokens=24))
+    out_q = np.asarray(eng_q.generate(prompts, n_tokens=24))
+    agree = (out_fp == out_q).mean()
+    print(f"[serve] greedy-token agreement fp vs msb-4bit: {agree:.1%}")
+    toks = jnp.asarray(data.batch(1234)["tokens"], jnp.int32)
+    print(f"[serve] held-out NLL: fp {eng_fp.score(toks):.4f} | "
+          f"4-bit {eng_q.score(toks):.4f} | floor {data.entropy():.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,94 @@
+"""End-to-end driver: train an LM -> MSB-quantize -> serve batched requests.
+
+    PYTHONPATH=src python examples/train_quantize_serve.py            # tiny (CPU)
+    PYTHONPATH=src python examples/train_quantize_serve.py --preset 100m --steps 300
+
+The default preset trains a small Markov-chain LM in ~2 minutes on CPU; the
+``100m`` preset is the assignment's "train a ~100M model for a few hundred
+steps" configuration for real hardware. Fault tolerance is live: the run
+checkpoints periodically, auto-resumes if re-launched, and drains cleanly on
+SIGTERM/SIGINT (PreemptionHandler).
+"""
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import smoke_config, get_config
+from repro.core import QuantPolicy, param_bits, quantize_params
+from repro.data import MarkovStream, Prefetcher
+from repro.models import Model
+from repro.serve import ServeEngine
+from repro.train import (AdamW, Checkpointer, OptConfig, PreemptionHandler,
+                         StragglerMonitor, train_loop)
+
+
+def build_model(preset):
+    if preset == "tiny":
+        cfg = smoke_config("qwen1.5-0.5b")
+        cfg = dataclasses.replace(cfg, vocab_size=128, vocab_round=128,
+                                  d_model=128, n_layers=2)
+        batch, seq = 8, 64
+    elif preset == "100m":
+        cfg = dataclasses.replace(
+            get_config("qwen1.5-0.5b"), n_layers=12, d_model=768, n_heads=12,
+            n_kv_heads=12, d_ff=2048, vocab_size=32000, head_dim=64)
+        batch, seq = 32, 1024
+    else:
+        raise SystemExit(f"unknown preset {preset}")
+    return Model(cfg), batch, seq
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="tiny", choices=["tiny", "100m"])
+    ap.add_argument("--steps", type=int, default=80)
+    ap.add_argument("--ckpt-dir", default="/tmp/msb_e2e_ckpt")
+    args = ap.parse_args()
+
+    model, batch, seq = build_model(args.preset)
+    cfg = model.cfg
+    data = MarkovStream(cfg.vocab_size, seq, batch, seed=7)
+    print(f"[e2e] {args.preset}: {cfg.n_layers}L d={cfg.d_model} "
+          f"vocab={cfg.vocab_size}; chain entropy "
+          f"{data.entropy():.3f} nats (loss floor)")
+
+    opt = AdamW(OptConfig(lr=3e-3, warmup_steps=10, total_steps=args.steps))
+    ck = Checkpointer(args.ckpt_dir, keep=2)
+    handler = PreemptionHandler()
+    mon = StragglerMonitor()
+    state, metrics = train_loop(
+        model, opt, Prefetcher(iter(data)), steps=args.steps,
+        rng=jax.random.PRNGKey(0), checkpointer=ck, checkpoint_every=25,
+        straggler_monitor=mon, should_stop=handler.should_stop, log_every=10)
+    ck.wait()
+    print(f"[e2e] trained; median step {mon.median * 1e3:.1f} ms; "
+          f"stragglers flagged: {len(mon.flagged)}")
+
+    params = state["params"]
+    bits_fp = param_bits(params)
+    qparams, report = quantize_params(
+        params, QuantPolicy(bits=4, block=64, solver="dp", min_size=4096))
+    print(f"[e2e] MSB-quantized {len(report)} tensors: "
+          f"{bits_fp / 8e6:.1f} MB -> {param_bits(qparams) / 8e6:.1f} MB")
+
+    eval_batch = data.batch(10_000)
+    nll_fp = float(jax.jit(model.loss)(
+        params, {k: jnp.asarray(v) for k, v in eval_batch.items()})[0])
+    nll_q = float(jax.jit(model.loss)(
+        qparams, {k: jnp.asarray(v) for k, v in eval_batch.items()})[0])
+    print(f"[e2e] held-out NLL: fp {nll_fp:.4f} | msb-4bit {nll_q:.4f} "
+          f"(floor {data.entropy():.4f})")
+
+    engine = ServeEngine(model, qparams, max_seq=seq + 32)
+    prompts = jnp.asarray(
+        np.stack([data.batch(20_000)["tokens"][0][:16]] * 4), jnp.int32)
+    out = engine.generate(prompts, n_tokens=16, temperature=0.7)
+    print(f"[e2e] served {out.shape[0]} requests x {out.shape[1]} tokens "
+          f"from the 4-bit model: {np.asarray(out[0])[:8]}...")
+
+
+if __name__ == "__main__":
+    main()

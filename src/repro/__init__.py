@@ -1,0 +1,3 @@
+"""repro — MSB dynamic-grouping quantization at pod scale (see README.md)."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,288 @@
+"""Vectorized JAX solvers for the MSB dynamic-grouping objective.
+
+TPU-native adaptation of the paper's CPU heap solvers (DESIGN.md Sec. 2):
+
+* ``dp_boundaries``      — the *exact* DP (paper Alg. 1) as a dense masked-min
+                           reduction. O(g n^2) fused vector ops, branch-free,
+                           vmappable over millions of 64-element blocks. On
+                           TPU this runs the paper's 8-hour oracle per matrix
+                           in well under a second — and it is exact.
+* ``kmeans1d_boundaries``— per-tensor solver: within-group-variance
+                           minimization over sorted 1-D magnitudes == 1-D
+                           k-means with contiguous clusters. Equal-range
+                           binning init (paper Alg. 4 idea) + vectorized
+                           Lloyd sweeps (deterministic, objective
+                           non-increasing) instead of the stochastic local
+                           search.
+
+All functions operate on *sorted magnitudes* and return boundary indices
+``b`` of length ``g+1`` with ``b[0] = 0``, ``b[g] = n``; group ``z`` covers
+sorted positions ``[b[z], b[z+1])``. Empty trailing groups have repeated
+boundaries.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .objective import prefix_sums
+
+_NEG = -1
+_INF = jnp.inf
+
+
+def _cost_matrix(v, lam=0.0):
+    """C[i, j] = sse of sorted interval [i, j) (+ lam/(j-i)); +inf for i >= j."""
+    n = v.shape[0]
+    s1, s2 = prefix_sums(v)
+    idx = jnp.arange(n + 1)
+    m = (idx[None, :] - idx[:, None]).astype(v.dtype)
+    d1 = s1[None, :] - s1[:, None]
+    d2 = s2[None, :] - s2[:, None]
+    msafe = jnp.maximum(m, 1.0)
+    c = d2 - d1 * d1 / msafe
+    if lam:
+        c = c + lam / msafe
+    return jnp.where(m >= 1.0, c, _INF)
+
+
+def dp_boundaries(v, g, lam=0.0, choose_k=False):
+    """Exact dynamic-grouping DP on sorted magnitudes ``v`` (paper Alg. 1).
+
+    Returns (boundaries, cost). ``g`` is static (the 2^{b-1} codebook size).
+    With ``choose_k`` the regularized objective picks k* <= g (Eq. 2);
+    otherwise exactly g groups are used (fixed-codebook b-bit setting).
+    """
+    n = v.shape[0]
+    C = _cost_matrix(v, lam)
+    # D_k[j] = min cost of first j elements in exactly k groups.
+    D = C[0]                       # k = 1
+    args = [jnp.zeros(n + 1, jnp.int32)]
+    finals = [D[n]]
+    for _ in range(1, g):
+        M = D[:, None] + C         # (n+1, n+1); invalid entries are +inf
+        A = jnp.argmin(M, axis=0).astype(jnp.int32)
+        D = jnp.min(M, axis=0)
+        args.append(A)
+        finals.append(D[n])
+    args = jnp.stack(args)          # (g, n+1); args[k-1] = split table for k groups
+    finals = jnp.stack(finals)      # (g,)
+    if choose_k:
+        k_star = jnp.argmin(finals).astype(jnp.int32) + 1
+    else:
+        k_star = jnp.int32(min(g, n))
+    cost = finals[k_star - 1]
+
+    # Vectorized backtrack: walk k = k_star..1 setting b[k-1] = A_k[b[k]].
+    def step(carry, _):
+        j, k, b = carry
+        active = k >= 1
+        j_new = jnp.where(active, args[jnp.maximum(k - 1, 0), j], j)
+        b = jnp.where(active, b.at[jnp.maximum(k - 1, 0)].set(j_new), b)
+        return (jnp.where(active, j_new, j), k - 1, b), None
+
+    b0 = jnp.full((g + 1,), n, dtype=jnp.int32).at[0].set(0)
+    (_, _, bounds), _ = jax.lax.scan(step, (jnp.int32(n), k_star, b0), None, length=g)
+    bounds = bounds.at[0].set(0)
+    return bounds, cost
+
+
+def kmeans1d_boundaries(v, g, iters=30):
+    """Vectorized Lloyd iterations on sorted magnitudes (per-tensor solver).
+
+    Runs from both an equal-range init (paper Alg. 4) and an equal-mass
+    (quantile) init and keeps the lower-objective solution — Lloyd is a
+    local method and the two inits fail on different distributions
+    (equal-range on heavy heads, equal-mass on heavy tails).
+    """
+    n = v.shape[0]
+    s1, s2 = prefix_sums(v)
+    lo, hi = v[0], v[-1]
+
+    def lloyd(b):
+        def body(_, b):
+            bf = jnp.concatenate([jnp.zeros(1, jnp.int32), b,
+                                  jnp.full((1,), n, jnp.int32)])
+            cnt = (bf[1:] - bf[:-1]).astype(v.dtype)
+            sums = s1[bf[1:]] - s1[bf[:-1]]
+            c = sums / jnp.maximum(cnt, 1.0)
+            # empty clusters inherit their left boundary's value; keep order
+            fallback = v[jnp.clip(bf[:-1], 0, n - 1)]
+            c = jnp.where(cnt > 0, c, fallback)
+            c = jax.lax.associative_scan(jnp.maximum, c)
+            mids = 0.5 * (c[:-1] + c[1:])
+            return jnp.searchsorted(v, mids).astype(jnp.int32)
+
+        b = jax.lax.fori_loop(0, iters, body, b)
+        return jnp.concatenate([jnp.zeros(1, jnp.int32), b,
+                                jnp.full((1,), n, jnp.int32)])
+
+    def cost(bounds):
+        cnt = (bounds[1:] - bounds[:-1]).astype(v.dtype)
+        d1 = s1[bounds[1:]] - s1[bounds[:-1]]
+        d2 = s2[bounds[1:]] - s2[bounds[:-1]]
+        sse = d2 - jnp.where(cnt > 0, d1 * d1 / jnp.maximum(cnt, 1.0), 0.0)
+        return jnp.sum(jnp.where(cnt > 0, sse, 0.0))
+
+    edges = lo + (hi - lo) * jnp.arange(1, g, dtype=v.dtype) / g
+    b_range = lloyd(jnp.searchsorted(v, edges).astype(jnp.int32))
+    b_mass = lloyd((jnp.arange(1, g) * n // g).astype(jnp.int32))
+    return jnp.where(cost(b_range) <= cost(b_mass), b_range, b_mass)
+
+
+def windowed_dp_boundaries(v, g, n_windows=1024, lam=0.0, refine_iters=8):
+    """Windowed exact DP (beyond-paper per-tensor solver; DESIGN.md Sec. 2).
+
+    WGM's coarsening idea executed optimally: aggregate the sorted
+    magnitudes into ``n_windows`` equal-count windows, run the *weighted*
+    exact DP over window statistics — O(g W^2) fused vector ops — then
+    polish boundaries with a few Lloyd sweeps at element granularity.
+    Dominates plain Lloyd (which hits ~1.3x-optimal local minima on
+    half-normal data) at a tiny fraction of the full DP's cost.
+    """
+    n = v.shape[0]
+    w = min(n_windows, n)
+    k = -(-n // w)
+    pad = w * k - n
+    vp = jnp.concatenate([v, jnp.full((pad,), v[-1], v.dtype)])
+    mask = (jnp.arange(w * k) < n).astype(v.dtype).reshape(w, k)
+    vw = vp.reshape(w, k)
+    cnt = jnp.sum(mask, axis=1)
+    s = jnp.sum(vw * mask, axis=1)
+    q = jnp.sum(vw * vw * mask, axis=1)
+    z = jnp.zeros((1,), v.dtype)
+    C = jnp.concatenate([z, jnp.cumsum(cnt)])
+    S = jnp.concatenate([z, jnp.cumsum(s)])
+    Q = jnp.concatenate([z, jnp.cumsum(q)])
+
+    m = C[None, :] - C[:, None]
+    d1 = S[None, :] - S[:, None]
+    d2 = Q[None, :] - Q[:, None]
+    msafe = jnp.maximum(m, 1.0)
+    cost = d2 - d1 * d1 / msafe
+    if lam:
+        cost = cost + lam / msafe
+    Cmat = jnp.where(m >= 1.0, cost, _INF)
+
+    D = Cmat[0]
+    args = [jnp.zeros(w + 1, jnp.int32)]
+    for _ in range(1, g):
+        M = D[:, None] + Cmat
+        args.append(jnp.argmin(M, axis=0).astype(jnp.int32))
+        D = jnp.min(M, axis=0)
+    args = jnp.stack(args)
+
+    def step(carry, _):
+        j, kk, b = carry
+        active = kk >= 1
+        j_new = jnp.where(active, args[jnp.maximum(kk - 1, 0), j], j)
+        b = jnp.where(active, b.at[jnp.maximum(kk - 1, 0)].set(j_new), b)
+        return (jnp.where(active, j_new, j), kk - 1, b), None
+
+    b0 = jnp.full((g + 1,), w, dtype=jnp.int32).at[0].set(0)
+    (_, _, wb), _ = jax.lax.scan(step, (jnp.int32(w), jnp.int32(min(g, w)),
+                                        b0), None, length=g)
+    wb = wb.at[0].set(0)
+    bounds = jnp.minimum(wb * k, n).astype(jnp.int32)
+
+    # Lloyd polish at element granularity from the near-optimal init
+    if refine_iters:
+        s1, _ = prefix_sums(v)
+
+        def body(_, b):
+            bf = b
+            cnt = (bf[1:] - bf[:-1]).astype(v.dtype)
+            sums = s1[bf[1:]] - s1[bf[:-1]]
+            c = sums / jnp.maximum(cnt, 1.0)
+            fallback = v[jnp.clip(bf[:-1], 0, n - 1)]
+            c = jnp.where(cnt > 0, c, fallback)
+            c = jax.lax.associative_scan(jnp.maximum, c)
+            mids = 0.5 * (c[:-1] + c[1:])
+            inner = jnp.searchsorted(v, mids).astype(jnp.int32)
+            return jnp.concatenate([jnp.zeros(1, jnp.int32), inner,
+                                    jnp.full((1,), n, jnp.int32)])
+
+        bounds = jax.lax.fori_loop(0, refine_iters, body, bounds)
+    return bounds
+
+
+def boundaries_to_levels(bounds, n):
+    """Level id per sorted position: level(p) = #{z in 1..g-1 : b[z] <= p}."""
+    pos = jnp.arange(n)
+    return jnp.searchsorted(bounds[1:-1], pos, side="right").astype(jnp.int32)
+
+
+def scales_from_boundaries(v, bounds):
+    """alpha_z = mean(|group z|); 0 for empty groups."""
+    s1, _ = prefix_sums(v)
+    cnt = (bounds[1:] - bounds[:-1]).astype(v.dtype)
+    sums = s1[bounds[1:]] - s1[bounds[:-1]]
+    return jnp.where(cnt > 0, sums / jnp.maximum(cnt, 1.0), 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("g", "method", "choose_k", "iters"))
+def solve_flat(a_flat, g, method="dp", lam=0.0, choose_k=False, iters=30):
+    """Solve MSB grouping for one flat vector of weights.
+
+    Returns (levels, scales) in the *original* element order:
+      levels int32 in [0, g), scales (g,) f32; dequant = sign(a)*scales[levels].
+    """
+    a = a_flat.astype(jnp.float32)
+    mags = jnp.abs(a)
+    order = jnp.argsort(mags)
+    v = mags[order]
+    if method == "dp":
+        bounds, _ = dp_boundaries(v, g, lam=lam, choose_k=choose_k)
+    elif method == "kmeans":
+        bounds = kmeans1d_boundaries(v, g, iters=iters)
+    elif method == "wdp":
+        bounds = windowed_dp_boundaries(v, g, lam=lam)
+    else:
+        raise ValueError(f"unknown solver method: {method}")
+    levels_sorted = boundaries_to_levels(bounds, v.shape[0])
+    scales = scales_from_boundaries(v, bounds)
+    levels = jnp.zeros_like(levels_sorted).at[order].set(levels_sorted)
+    return levels, scales
+
+
+def solve_blocks(blocks, g, method="dp", lam=0.0, iters=30, chunk=4096):
+    """vmapped solver over a (n_blocks, block_size) batch.
+
+    ``chunk`` bounds peak memory of the (chunk, n+1, n+1) DP cost tensors via
+    ``lax.map`` over block chunks — the HBM->VMEM streaming structure a TPU
+    wants. Returns (levels (n_blocks, bs) int32, scales (n_blocks, g) f32).
+    """
+    nb, bs = blocks.shape
+    single = functools.partial(_solve_block_single, g=g, method=method,
+                               lam=lam, iters=iters)
+    vsolve = jax.vmap(single)
+    if nb <= chunk:
+        return vsolve(blocks)
+    pad = (-nb) % chunk
+    padded = jnp.concatenate([blocks, jnp.zeros((pad, bs), blocks.dtype)])
+    padded = padded.reshape(-1, chunk, bs)
+    levels, scales = jax.lax.map(vsolve, padded)
+    levels = levels.reshape(-1, bs)[:nb]
+    scales = scales.reshape(-1, scales.shape[-1])[:nb]
+    return levels, scales
+
+
+def _solve_block_single(block, g, method, lam, iters):
+    a = block.astype(jnp.float32)
+    mags = jnp.abs(a)
+    order = jnp.argsort(mags)
+    v = mags[order]
+    if method == "dp":
+        bounds, _ = dp_boundaries(v, g, lam=lam)
+    elif method == "kmeans":
+        bounds = kmeans1d_boundaries(v, g, iters=iters)
+    elif method == "wdp":
+        bounds = windowed_dp_boundaries(v, g, lam=lam)
+    else:
+        raise ValueError(f"unknown solver method: {method}")
+    levels_sorted = boundaries_to_levels(bounds, v.shape[0])
+    scales = scales_from_boundaries(v, bounds)
+    levels = jnp.zeros_like(levels_sorted).at[order].set(levels_sorted)
+    return levels, scales

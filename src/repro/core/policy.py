@@ -1,0 +1,119 @@
+"""Quantization policy: apply MSB PTQ to a model parameter pytree.
+
+``QuantPolicy`` is the framework-level integration point of the paper's
+technique: it selects which parameter leaves get quantized (by path regex +
+rank/size thresholds), at what bits/granularity/solver, and rewrites the
+params pytree in place with ``QTensor`` leaves. Layer stacks produced by
+scan-over-layers (leading layer dim) are handled by folding the layer dim
+into the block batch — blocks never straddle rows, so the grouping is
+identical to quantizing each layer separately.
+
+Quantization is *local to each weight shard* on a mesh (no collectives); see
+examples/distributed_quantize.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .quantize import QTensor, quantize_blockwise, quantize_pertensor, dequantize
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantPolicy:
+    bits: int = 4
+    block: int = 64              # -1 => per-tensor
+    solver: str = "dp"           # dp | kmeans | wgm | gg | wgm_lo (CPU)
+    lam: float = 0.0
+    include: str = r".*"
+    exclude: str = (r".*(norm|scale_param|bias|ln|rope|router|conv_w|"
+                    r"dt_bias|a_log|d_skip|f_bias|w_rec).*")
+    min_size: int = 1 << 12      # skip tiny leaves (norm scales etc.)
+    double_quant: bool = False
+
+    def selects(self, path: str, leaf) -> bool:
+        if not hasattr(leaf, "ndim") or leaf.ndim < 2 or leaf.size < self.min_size:
+            return False
+        if re.match(self.exclude, path, re.I):
+            return False
+        if self.block != -1 and leaf.shape[-1] % abs(self.block):
+            return False
+        return re.match(self.include, path, re.I) is not None
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+    return "/".join(parts)
+
+
+def quantize_params(params, policy: QuantPolicy = QuantPolicy(), verbose=False):
+    """Rewrite matching leaves of ``params`` as QTensor. Returns (tree, report)."""
+    report = {}
+
+    def visit(path, leaf):
+        p = _path_str(path)
+        if isinstance(leaf, QTensor) or not policy.selects(p, leaf):
+            return leaf
+        if policy.block == -1:
+            solver = "wdp" if policy.solver == "dp" else policy.solver
+            if leaf.ndim >= 3:
+                # stacked (scan-over-layers) params: per-tensor = per layer
+                # matrix; vmap keeps the leading layer dim scannable
+                q = jax.vmap(lambda w: quantize_pertensor(
+                    w, bits=policy.bits, solver=solver, lam=policy.lam))(leaf)
+            else:
+                q = quantize_pertensor(leaf, bits=policy.bits, solver=solver,
+                                       lam=policy.lam)
+        else:
+            q = quantize_blockwise(leaf, bits=policy.bits, block=policy.block,
+                                   solver=policy.solver, lam=policy.lam)
+        if policy.double_quant:
+            from .quantize import double_quantize
+            q = double_quantize(q)
+        report[p] = (leaf.shape, policy.bits)
+        if verbose:
+            print(f"  quantized {p}: {leaf.shape} -> {policy.bits}b/"
+                  f"{'tensor' if policy.block == -1 else policy.block}")
+        return q
+
+    tree = jax.tree_util.tree_map_with_path(visit, params)
+    return tree, report
+
+
+def dequantize_params(params, dtype=None):
+    """Materialize all QTensor leaves back to dense arrays (simulation mode)."""
+    def visit(leaf):
+        if isinstance(leaf, QTensor):
+            w = dequantize(leaf)
+            return w.astype(dtype) if dtype is not None else w
+        return leaf
+    return jax.tree_util.tree_map(
+        visit, params, is_leaf=lambda x: isinstance(x, QTensor))
+
+
+def param_bits(params):
+    """Total storage bits of a (possibly mixed) params tree."""
+    total = 0
+
+    def visit(leaf):
+        nonlocal total
+        if isinstance(leaf, QTensor):
+            total += leaf.codes.size * leaf.bits + leaf.scales.size * 16
+        elif hasattr(leaf, "size"):
+            total += leaf.size * jnp.dtype(leaf.dtype).itemsize * 8
+        return leaf
+
+    jax.tree_util.tree_map(visit, params,
+                           is_leaf=lambda x: isinstance(x, QTensor))
+    return total

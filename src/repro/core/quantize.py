@@ -1,0 +1,235 @@
+"""MSB quantized-tensor representation and quantize/dequantize API.
+
+Representation (paper Sec. 4.1): each weight is ``w_hat = alpha_z * s`` with
+``s in {-1, 0, +1}`` (0 only for exact-zero weights — the paper's zero-loss
+special group) and ``z`` indexing ``2^{b-1}`` per-group positive scales.
+
+Stored form:
+  codes : int8, same shape as w; code = sign * (level + 1), 0 for zeros
+  scales: (n_blocks, 2^{b-1}) — one codebook row per block (block-wise) or a
+          single row (per-tensor)
+
+``QTensor`` is a pytree, so quantized params flow through jit / device_put /
+sharding like any array. A packed int4 form (two codes per byte) feeds the
+Pallas fused dequant-matmul kernel (kernels/msb_matmul).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import grouping
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class QTensor:
+    """MSB-quantized tensor. Behaves as a pytree (codes/scales are leaves)."""
+    codes: jax.Array          # int8, logical shape of w
+    scales: jax.Array         # (n_blocks, n_levels) f32/bf16
+    bits: int                 # target bit-width b
+    block: int                # block size (64) or -1 for per-tensor
+    dtype: object             # dequantized dtype
+
+    @property
+    def shape(self):
+        return self.codes.shape
+
+    @property
+    def n_levels(self):
+        return self.scales.shape[-1]
+
+    def tree_flatten(self):
+        return (self.codes, self.scales), (self.bits, self.block, self.dtype)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        codes, scales = children
+        bits, block, dtype = aux
+        return cls(codes, scales, bits, block, dtype)
+
+    def dequantize(self):
+        return dequantize(self)
+
+
+def _solve(blocks, g, solver, lam, iters):
+    if solver in ("dp", "kmeans", "wdp"):
+        return grouping.solve_blocks(blocks, g, method=solver, lam=lam, iters=iters)
+    if solver in ("wgm", "gg", "dg", "wgm_lo"):
+        # paper-faithful CPU solvers (offline path) — NumPy, per block
+        from . import reference
+        blocks_np = np.asarray(blocks, dtype=np.float64)
+        levels = np.zeros(blocks_np.shape, dtype=np.int32)
+        scales = np.zeros((blocks_np.shape[0], g), dtype=np.float32)
+        for i, blk in enumerate(blocks_np):
+            if solver == "gg":
+                b, order = reference.greedy_grouping(blk, g, lam=lam)
+            elif solver == "dg":
+                b, order, _ = reference.dynamic_grouping(blk, g, lam=lam)
+            elif solver == "wgm_lo":
+                b, order = reference.wgm_local_opt(blk, g, lam=lam)
+            else:
+                w = max(1, blk.size // 256) if blk.size > 4096 else 1
+                b, order = reference.windowed_greedy_merging(blk, g, window=w, lam=lam)
+            _, lv, sc = reference.reconstruct(blk, b, order, n_levels=g)
+            levels[i] = lv
+            scales[i, : len(sc)] = sc
+        return jnp.asarray(levels), jnp.asarray(scales)
+    raise ValueError(f"unknown solver: {solver}")
+
+
+def _nearest_refine(blocks, levels, scales):
+    """Re-encode each weight to the *nearest* codebook scale.
+
+    Deployment encode given a fixed codebook {alpha_z}: interval assignment
+    from a heuristic solver can be improved by nearest-scale assignment
+    (~15% MSE for the greedy solvers; a no-op at the DP optimum, which is a
+    Lloyd fixed point). Beyond-paper refinement, property-tested to never
+    increase the error.
+    """
+    mags = jnp.abs(blocks)                                 # (nb, bs)
+    d = jnp.abs(mags[:, :, None] - scales[:, None, :])     # (nb, bs, g)
+    # empty groups carry scale 0 — exclude them unless the weight is 0
+    valid = (scales > 0)[:, None, :] | (mags[:, :, None] == 0)
+    d = jnp.where(valid, d, jnp.inf)
+    return jnp.argmin(d, axis=-1).astype(levels.dtype)
+
+
+def quantize_blockwise(w, bits=4, block=64, solver="dp", lam=0.0, iters=30,
+                       scale_dtype=jnp.float32, refine=False):
+    """4-bit (default) block-wise MSB quantization: 64-element groups per row.
+
+    ``w`` is reshaped to (n_blocks, block) along its last axis (the paper's
+    64-elements-per-row blocks). Last axis must be divisible by ``block``.
+    ``refine`` re-encodes each weight to its nearest codebook scale
+    (improves the heuristic solvers; no-op for the exact DP).
+    """
+    w = jnp.asarray(w)
+    if w.shape[-1] % block:
+        raise ValueError(f"last dim {w.shape[-1]} not divisible by block {block}")
+    g = 2 ** (bits - 1)
+    blocks = w.reshape(-1, block).astype(jnp.float32)
+    levels, scales = _solve(blocks, g, solver, lam, iters)
+    if refine:
+        levels = _nearest_refine(blocks, levels, scales)
+    signs = jnp.sign(blocks).astype(jnp.int8)
+    codes = (signs * (levels.astype(jnp.int8) + 1)).reshape(w.shape)
+    # scales keep the weight's batch dims so stacked (scan-over-layers)
+    # params stay scannable: (..., last//block, g)
+    scales = scales.reshape(*w.shape[:-1], w.shape[-1] // block, g)
+    return QTensor(codes, scales.astype(scale_dtype), bits, block, w.dtype)
+
+
+def quantize_pertensor(w, bits=6, solver="wdp", lam=0.0, iters=50,
+                       scale_dtype=jnp.float32):
+    """6-bit (default) per-tensor MSB quantization: one global codebook."""
+    w = jnp.asarray(w)
+    g = 2 ** (bits - 1)
+    flat = w.reshape(1, -1).astype(jnp.float32)
+    levels, scales = _solve(flat, g, solver, lam, iters)
+    signs = jnp.sign(flat).astype(jnp.int8)
+    codes = (signs * (levels.astype(jnp.int8) + 1)).reshape(w.shape)
+    return QTensor(codes, scales.astype(scale_dtype), bits, -1, w.dtype)
+
+
+def dequantize(q: QTensor):
+    """w_hat = sign(code) * scales[block, |code| - 1]; exact 0 for code 0.
+
+    Works for any scales layout (..., g): each scale row covers
+    codes.size / n_rows consecutive codes (64 block-wise, a whole matrix
+    per-tensor, a layer slice for stacked per-tensor params).
+    """
+    codes = q.codes
+    g = q.scales.shape[-1]
+    rows = q.scales.size // g
+    blocks = codes.reshape(rows, -1)
+    lv = jnp.abs(blocks).astype(jnp.int32)
+    scales2d = q.scales.reshape(rows, g).astype(jnp.float32)
+    mag = jnp.take_along_axis(scales2d, jnp.maximum(lv - 1, 0), axis=1)
+    mag = jnp.where(lv > 0, mag, 0.0)
+    out = jnp.sign(blocks).astype(jnp.float32) * mag
+    return out.reshape(codes.shape).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# int4 packing (deployment path for the Pallas kernel)
+# ---------------------------------------------------------------------------
+
+def pack_codes_int4(codes):
+    """Pack 4-bit MSB codes two-per-byte.
+
+    nibble = (sign_bit << 3) | level, level in [0, 8). Exact zeros (code 0)
+    pack as level 0 / sign + (they dequantize to +alpha_0 — the packed path
+    trades the zero special-case for density; see DESIGN.md Sec. 7).
+    Element 2i -> low nibble, 2i+1 -> high nibble.
+    """
+    flat = codes.reshape(-1)
+    if flat.shape[0] % 2:
+        raise ValueError("packing requires an even element count")
+    lv = jnp.maximum(jnp.abs(flat).astype(jnp.int32) - 1, 0)
+    sign_bit = (flat < 0).astype(jnp.int32)
+    nib = (sign_bit << 3) | lv
+    lo, hi = nib[0::2], nib[1::2]
+    return ((hi << 4) | lo).astype(jnp.uint8)
+
+
+def unpack_codes_int4(packed, shape):
+    packed = packed.astype(jnp.int32)
+    lo = packed & 0xF
+    hi = (packed >> 4) & 0xF
+    nib = jnp.stack([lo, hi], axis=-1).reshape(-1)
+    lv = (nib & 0x7).astype(jnp.int8) + 1
+    sign = jnp.where((nib >> 3) & 1 > 0, jnp.int8(-1), jnp.int8(1))
+    return (sign * lv).reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# Double quantization (paper Appendix G)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DQScales:
+    """Scales quantized once more with WGM/MSB at 6 bits over 2048-blocks."""
+    q: QTensor
+    shape: tuple
+
+    def dequantize(self):
+        return self.q.dequantize().reshape(self.shape)
+
+
+def double_quantize(q: QTensor, bits=6, block=2048, solver="kmeans"):
+    """Quantize the scale table itself (recursive MSB), per Appendix G.
+
+    Storage: 4 + 8*6.25/64 ~ 4.78 bits/weight for the default setting.
+    """
+    scales = q.scales.reshape(-1)
+    pad = (-scales.shape[0]) % block
+    padded = jnp.concatenate([scales, jnp.zeros((pad,), scales.dtype)])
+    sq = quantize_blockwise(padded.reshape(-1, block), bits=bits, block=block,
+                            solver=solver)
+    return dataclasses.replace(
+        q, scales=sq.dequantize().reshape(-1)[: scales.shape[0]]
+                   .reshape(q.scales.shape))
+
+
+# ---------------------------------------------------------------------------
+# Storage accounting (paper Sec. 4.1)
+# ---------------------------------------------------------------------------
+
+def storage_bits_per_weight(q: QTensor, double_quant=False,
+                            scale_bits=16, dq_bits=6, dq_block=2048):
+    """Effective bits/weight incl. codebook metadata.
+
+    4-bit block-64, bf16 scales: 4 + 8*16/64 = 6.00 (paper).  With DQ:
+    4 + 8*(6 + 32*16/2048)/64 = 4.78 (paper App. G). Per-tensor: ~b bits.
+    """
+    n = float(np.prod(q.shape))
+    if q.block == -1:
+        return q.bits + q.n_levels * scale_bits / n
+    per_scale = (dq_bits + 32 * scale_bits / dq_block) if double_quant else scale_bits
+    return q.bits + q.n_levels * per_scale / q.block

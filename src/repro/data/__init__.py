@@ -1,0 +1,1 @@
+from .synthetic import MarkovStream, Prefetcher, TokenStream

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+msb_matmul       — fused MSB int4 dequantize + matmul (the paper's weights
+                   executed without decode-to-bf16 materialization)
+flash_attention  — tiled online-softmax attention forward with causal tile
+                   skipping (prefill hot-spot)
+
+Each kernel ships ops.py (jit'd dispatch) + ref.py (pure-jnp oracle) and is
+validated in interpret mode over shape/dtype sweeps (tests/test_kernels.py).
+EXAMPLE.md documents the kernel-authoring conventions.
+"""

@@ -1,0 +1,101 @@
+"""Pallas TPU kernel: flash attention forward (causal/window/softcap, GQA).
+
+Grid: (batch * kv_heads * rep, Sq/bq) outer; the kernel loops over KV tiles
+with ``jax.lax.fori_loop`` keeping the online-softmax state (m, l, acc) in
+VMEM. Unlike the pure-JAX path (models/attention.py — also the oracle),
+fully-masked KV tiles ahead of the causal frontier are *skipped* via the
+loop upper bound, recovering the ~2x causal-waste the dry-run roofline
+charges the XLA path for (EXPERIMENTS.md §Perf).
+
+q: (B, H, Sq, d), k/v: (B, KV, Skv, d) — head-major layout so each grid row
+streams one head's tiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_NEG_INF = -2.0e38
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, *, bq, bkv, skv, causal, window,
+            softcap, scale):
+    iq = pl.program_id(1)
+    q = q_ref[...].astype(jnp.float32) * scale          # (bq, d)
+    d = q.shape[-1]
+    qpos = iq * bq + jax.lax.iota(jnp.int32, bq)
+
+    n_kv = skv // bkv
+    if causal:
+        # skip tiles strictly above the causal frontier
+        hi = jnp.minimum(((iq + 1) * bq + bkv - 1) // bkv, n_kv)
+    else:
+        hi = n_kv
+
+    def body(ik, carry):
+        acc, m_i, l_i = carry
+        kt = pl.load(k_ref, (pl.dslice(ik * bkv, bkv), slice(None)))
+        vt = pl.load(v_ref, (pl.dslice(ik * bkv, bkv), slice(None)))
+        s = jnp.dot(q, kt.astype(jnp.float32).T,
+                    preferred_element_type=jnp.float32)  # (bq, bkv)
+        if softcap > 0:
+            s = softcap * jnp.tanh(s / softcap)
+        kpos = ik * bkv + jax.lax.iota(jnp.int32, bkv)
+        mask = jnp.ones((bq, bkv), jnp.bool_)
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if window > 0:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        s = jnp.where(mask, s, _NEG_INF)
+        m_new = jnp.maximum(m_i, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_i - m_new)
+        l_new = l_i * corr + jnp.sum(p, axis=-1)
+        pv = jnp.dot(p.astype(vt.dtype), vt,
+                     preferred_element_type=jnp.float32)
+        acc = acc * corr[:, None] + pv
+        return acc, m_new, l_new
+
+    acc0 = jnp.zeros((bq, d), jnp.float32)
+    m0 = jnp.full((bq,), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    acc, m_i, l_i = jax.lax.fori_loop(0, hi, body, (acc0, m0, l0))
+    o_ref[...] = (acc / jnp.maximum(l_i, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "softcap", "scale", "bq", "bkv", "interpret"))
+def flash_attention_fwd(q, k, v, *, causal=True, window=0, softcap=0.0,
+                        scale=None, bq=128, bkv=128, interpret=False):
+    """q: (B, H, Sq, d); k/v: (B, KV, Skv, d). Returns (B, H, Sq, d)."""
+    b, h, sq, d = q.shape
+    kv, skv = k.shape[1], k.shape[2]
+    rep = h // kv
+    scale = float(scale if scale is not None else d ** -0.5)
+    bq = min(bq, sq)
+    bkv = min(bkv, skv)
+    assert sq % bq == 0 and skv % bkv == 0
+
+    qr = q.reshape(b * h, sq, d)
+    kr = jnp.repeat(k, rep, axis=1).reshape(b * h, skv, d)
+    vr = jnp.repeat(v, rep, axis=1).reshape(b * h, skv, d)
+
+    grid = (b * h, sq // bq)
+    out = pl.pallas_call(
+        functools.partial(_kernel, bq=bq, bkv=bkv, skv=skv, causal=causal,
+                          window=int(window), softcap=float(softcap),
+                          scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, bq, d), lambda g, i: (g, i, 0)),
+            pl.BlockSpec((None, skv, d), lambda g, i: (g, 0, 0)),
+            pl.BlockSpec((None, skv, d), lambda g, i: (g, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, bq, d), lambda g, i: (g, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, sq, d), q.dtype),
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(b, h, sq, d)

@@ -1,0 +1,21 @@
+"""Dispatch wrapper: Pallas kernel on TPU, jnp reference elsewhere."""
+from __future__ import annotations
+
+import jax
+
+from .flash_attention import flash_attention_fwd
+from .ref import flash_attention_ref
+
+
+def attention(q, k, v, *, causal=True, window=0, softcap=0.0, scale=None,
+              use_kernel=None, interpret=None):
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if use_kernel:
+        return flash_attention_fwd(q, k, v, causal=causal, window=window,
+                                   softcap=softcap, scale=scale,
+                                   interpret=interpret)
+    return flash_attention_ref(q, k, v, causal=causal, window=window,
+                               softcap=softcap, scale=scale)

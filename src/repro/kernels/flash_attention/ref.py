@@ -1,0 +1,18 @@
+"""Oracle for the Pallas flash-attention kernel: the pure-jnp chunked
+implementation from models/attention.py (itself validated against naive
+softmax attention in tests/test_attention.py), adapted to head-major layout.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ...models.attention import flash_attention as _fa
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, softcap=0.0,
+                        scale=None):
+    """q: (B, H, Sq, d); k/v: (B, KV, Skv, d) — head-major like the kernel."""
+    out = _fa(jnp.moveaxis(q, 1, 2), jnp.moveaxis(k, 1, 2),
+              jnp.moveaxis(v, 1, 2), causal=causal, window=window,
+              softcap=softcap, scale=scale)
+    return jnp.moveaxis(out, 1, 2)

@@ -1,0 +1,92 @@
+"""Pallas TPU kernel: fused MSB-dequantize + matmul.
+
+Computes ``y = x @ dequant(Wq)`` where Wq is 4-bit MSB weight storage:
+  packed : uint8 (K, N//2) — two 4-bit codes per byte
+           nibble = (sign_bit << 3) | level,  level in [0, 8)
+  scales : bf16/f32 (K, N//64, 8) — one 8-level codebook per 64-element
+           row-block (the paper's block-wise granularity)
+
+TPU mapping (DESIGN.md Sec. 2): the kernel streams x tiles (bm, bk) and
+packed-code tiles (bk, bn//2) HBM->VMEM, unpacks + dequantizes in VMEM
+registers (3 bit-ops + an 8-way select — no gather), and feeds the MXU with
+(bm, bk) x (bk, bn) bf16 tiles, accumulating f32 into the output tile. The
+weight HBM traffic is 6 bits/weight (codes + codebooks) instead of 16 —
+the decode-shape memory-roofline win measured in EXPERIMENTS.md §Perf.
+
+Grid: (M/bm, N/bn, K/bk), K innermost for output-tile accumulation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 64     # MSB block size along N
+LEVELS = 8     # 2^(4-1) scales per block
+
+
+def _kernel(x_ref, packed_ref, scales_ref, o_ref, *, bk_steps, dot_dtype):
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]                               # (bm, bk)
+    packed = packed_ref[...]                     # (bk, bn//2) uint8
+    scales = scales_ref[...]                     # (bk, bn//64, 8)
+
+    bk, half = packed.shape
+    bn = half * 2
+    p32 = packed.astype(jnp.int32)
+    lo = p32 & 0xF
+    hi = (p32 >> 4) & 0xF
+    nib = jnp.stack([lo, hi], axis=-1).reshape(bk, bn)
+    level = nib & 0x7                            # (bk, bn)
+    sign = (1 - 2 * ((nib >> 3) & 1)).astype(jnp.float32)
+
+    # 8-way select instead of a gather: w = sum_z [level == z] * scales[.., z]
+    sc = scales.astype(jnp.float32)              # (bk, bn//64, 8)
+    mag = jnp.zeros((bk, bn), jnp.float32)
+    for z in range(LEVELS):
+        sz = jnp.repeat(sc[:, :, z], BLOCK, axis=1)   # (bk, bn)
+        mag = mag + jnp.where(level == z, sz, 0.0)
+    w = (sign * mag).astype(dot_dtype)
+
+    acc = jnp.dot(x.astype(dot_dtype), w,
+                  preferred_element_type=jnp.float32)
+    o_ref[...] += acc
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def msb_matmul(x, packed, scales, *, bm=128, bn=256, bk=128, interpret=False):
+    """x: (M, K); packed: (K, N//2) uint8; scales: (K, N//64, 8).
+
+    Returns (M, N) in x.dtype. Tile sizes are MXU-aligned multiples of 128;
+    bn must be a multiple of 64 (the MSB block).
+    """
+    m, k = x.shape
+    n = packed.shape[1] * 2
+    bm = min(bm, m)
+    bn = min(bn, n)
+    bk = min(bk, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
+    assert bn % BLOCK == 0
+    dot_dtype = x.dtype if x.dtype in (jnp.bfloat16, jnp.float32) else jnp.float32
+
+    grid = (m // bm, n // bn, k // bk)
+    out = pl.pallas_call(
+        functools.partial(_kernel, bk_steps=grid[2], dot_dtype=dot_dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, s: (i, s)),
+            pl.BlockSpec((bk, bn // 2), lambda i, j, s: (s, j)),
+            pl.BlockSpec((bk, bn // BLOCK, LEVELS), lambda i, j, s: (s, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, packed, scales)
+    return out.astype(x.dtype)

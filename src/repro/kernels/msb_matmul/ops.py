@@ -1,0 +1,40 @@
+"""jit'd wrapper: QTensor -> kernel storage layout + dispatch.
+
+``qtensor_matmul(x, q)`` runs the Pallas kernel on TPU (or interpret mode on
+CPU for validation) and the jnp reference elsewhere. ``to_kernel_layout``
+converts the framework QTensor (codes int8 + (n_blocks, 8) scales) into the
+kernel's packed/reshaped layout once at load time.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ...core.quantize import QTensor, pack_codes_int4
+from .msb_matmul import BLOCK, LEVELS, msb_matmul
+from .ref import msb_matmul_ref
+
+
+def to_kernel_layout(q: QTensor):
+    """QTensor (codes (K,N), scales (K*N/64, 8)) -> (packed, scales3d)."""
+    assert q.bits == 4 and q.block == BLOCK, "kernel supports 4-bit block-64"
+    k, n = q.codes.shape
+    packed = pack_codes_int4(q.codes).reshape(k, n // 2)
+    scales = q.scales.reshape(k, n // BLOCK, LEVELS)
+    return packed, scales
+
+
+def qtensor_matmul(x, q: QTensor, *, use_kernel=None, interpret=None):
+    """y = x @ dequant(q). x: (..., K)."""
+    packed, scales = to_kernel_layout(q)
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if use_kernel:
+        y = msb_matmul(x2, packed, scales, interpret=interpret)
+    else:
+        y = msb_matmul_ref(x2, packed, scales)
+    return y.reshape(*lead, -1)

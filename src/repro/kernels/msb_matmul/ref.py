@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the msb_matmul kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+BLOCK = 64
+LEVELS = 8
+
+
+def unpack_ref(packed, n):
+    """uint8 (K, N//2) -> (level (K,N) int32, sign (K,N) f32)."""
+    p32 = packed.astype(jnp.int32)
+    lo = p32 & 0xF
+    hi = (p32 >> 4) & 0xF
+    nib = jnp.stack([lo, hi], axis=-1).reshape(packed.shape[0], n)
+    level = nib & 0x7
+    sign = (1 - 2 * ((nib >> 3) & 1)).astype(jnp.float32)
+    return level, sign
+
+
+def dequant_ref(packed, scales):
+    """Dequantize to (K, N) f32. scales: (K, N//64, 8)."""
+    k, half = packed.shape
+    n = half * 2
+    level, sign = unpack_ref(packed, n)
+    sc = scales.astype(jnp.float32)                          # (K, N//64, 8)
+    mag = jnp.take_along_axis(
+        sc, level.reshape(k, n // BLOCK, BLOCK), axis=2
+    ).reshape(k, n)
+    return sign * mag
+
+
+def msb_matmul_ref(x, packed, scales):
+    w = dequant_ref(packed, scales).astype(x.dtype)
+    return jnp.dot(x, w, preferred_element_type=jnp.float32).astype(x.dtype)

@@ -1,0 +1,228 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this AOT-compiles the real entry point (train_step /
+prefill / decode_step) against ShapeDtypeStruct stand-ins on the production
+mesh, prints ``memory_analysis()`` (fits-per-device proof) and
+``cost_analysis()`` (FLOPs/bytes), parses the collective schedule out of the
+compiled HLO, and writes a JSON artifact consumed by the roofline report
+(EXPERIMENTS.md is generated from these artifacts).
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma2-2b --shape train_4k
+  python -m repro.launch.dryrun --all --skip-existing
+  python -m repro.launch.dryrun --arch arctic-480b --shape decode_32k \
+      --quantized      # MSB int8-code weights (the paper's technique)
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import SHAPES, cell_is_skipped, get_config, list_archs
+from ..core.quantize import QTensor
+from ..models import Model
+from ..parallel import ParallelContext, from_mesh, tree_shardings
+from ..train import AdamW, OptConfig, make_train_step
+from . import roofline
+from .mesh import make_production_mesh
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "artifacts", "dryrun")
+
+# embed/unembed excluded in *simulation* mode: row-gather doesn't benefit
+# from a full-table dequant (the Pallas fused path quantizes them too)
+_QUANT_EXCLUDE = ("norm", "bias", "router", "conv_w", "dt_bias", "a_log",
+                  "d_skip", "f_bias", "w_rec", "embed")
+
+
+def _bf16(tree):
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.bfloat16)
+        if s.dtype == jnp.float32 and len(s.shape) >= 2 else s, tree)
+
+
+def quantize_shapes(shapes, axes, bits=4, block=64):
+    """Rewrite weight SDS leaves as QTensor stand-ins (+ matching axes)."""
+    def visit(path, sds, ax):
+        pstr = "/".join(str(getattr(p, "key", p)) for p in path)
+        shape = sds.shape
+        if (len(shape) < 2 or shape[-1] % block
+                or any(t in pstr for t in _QUANT_EXCLUDE)):
+            return sds, ax
+        g = 2 ** (bits - 1)
+        codes = jax.ShapeDtypeStruct(shape, jnp.int8)
+        scales = jax.ShapeDtypeStruct(
+            (*shape[:-1], shape[-1] // block, g), jnp.bfloat16)
+        q_sds = QTensor(codes, scales, bits, block, jnp.bfloat16)
+        q_ax = QTensor(tuple(ax), tuple(ax) + (None,), bits, block,
+                       jnp.bfloat16)
+        return q_sds, q_ax
+
+    flat_s, treedef = jax.tree_util.tree_flatten_with_path(shapes)
+    is_axes = lambda x: isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)
+    flat_a = jax.tree_util.tree_flatten(axes, is_leaf=is_axes)[0]
+    out_s, out_a = [], []
+    for (path, sds), ax in zip(flat_s, flat_a):
+        s, a = visit(path, sds, ax)
+        out_s.append(s)
+        out_a.append(a)
+    return (jax.tree_util.tree_unflatten(treedef, out_s),
+            jax.tree_util.tree_unflatten(treedef, out_a))
+
+
+def run_cell(arch, shape_name, multi_pod=False, quantized=False,
+             out_dir=ARTIFACT_DIR, verbose=True):
+    mesh_name = "multi_pod_2x16x16" if multi_pod else "single_pod_16x16"
+    tag = f"{arch}__{shape_name}__{mesh_name}" + ("__msb4" if quantized else "")
+    os.makedirs(out_dir, exist_ok=True)
+    out_path = os.path.join(out_dir, tag + ".json")
+
+    skip = cell_is_skipped(arch, shape_name)
+    if skip:
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+               "skipped": skip}
+        with open(out_path, "w") as f:
+            json.dump(rec, f, indent=1)
+        if verbose:
+            print(f"[dryrun] {tag}: SKIP ({skip})")
+        return rec
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    model = Model(cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    ctx = from_mesh(mesh)
+    chips = ctx.n_devices
+    t0 = time.time()
+
+    pshapes = model.param_shapes()
+    paxes = model.param_axes()
+    batch_sds, batch_axes = model.input_specs(shape)
+    batch_sh = tree_shardings(ctx, batch_axes, batch_sds)
+    n_act = cfg.n_active_params()
+
+    with mesh:
+        if shape.kind == "train":
+            big = cfg.n_params() > 100e9
+            opt = AdamW(OptConfig(moment_dtype="int8" if big else "f32"))
+            param_dtype = jnp.bfloat16 if big else jnp.float32
+            pshapes = jax.tree_util.tree_map(
+                lambda s: jax.ShapeDtypeStruct(s.shape, param_dtype), pshapes)
+            opt_sds = jax.eval_shape(opt.init, pshapes)
+            state_sds = {"params": pshapes, "opt": opt_sds}
+            state_axes_ = {"params": paxes,
+                           "opt": opt.moment_axes(paxes, pshapes)}
+            state_sh = tree_shardings(ctx, state_axes_, state_sds)
+            step_fn = make_train_step(model, opt, ctx)
+            jitted = jax.jit(step_fn, in_shardings=(state_sh, batch_sh),
+                             donate_argnums=0)
+            lowered = jitted.lower(state_sds, batch_sds)
+            model_flops = 6.0 * n_act * shape.global_batch * shape.seq_len
+        elif shape.kind == "prefill":
+            pshapes = _bf16(pshapes)
+            p_sh = tree_shardings(ctx, paxes, pshapes)
+            fn = lambda p, b: model.prefill(p, b, ctx)
+            jitted = jax.jit(fn, in_shardings=(p_sh, batch_sh))
+            lowered = jitted.lower(pshapes, batch_sds)
+            model_flops = 2.0 * n_act * shape.global_batch * shape.seq_len
+        else:  # decode
+            pshapes = _bf16(pshapes)
+            if quantized:
+                pshapes, paxes = quantize_shapes(pshapes, paxes)
+            p_sh = tree_shardings(ctx, paxes, pshapes)
+            fn = lambda p, c, t, pos: model.decode_step(p, c, t, pos, ctx)
+            jitted = jax.jit(fn, in_shardings=(
+                p_sh, batch_sh["cache"], batch_sh["tokens"],
+                batch_sh["cur_pos"]), donate_argnums=1)
+            lowered = jitted.lower(pshapes, batch_sds["cache"],
+                                   batch_sds["tokens"], batch_sds["cur_pos"])
+            model_flops = 2.0 * n_act * shape.global_batch
+
+        compiled = lowered.compile()
+
+    mem = compiled.memory_analysis()
+    rl = roofline.build(compiled, model_flops, chips)
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "quantized": quantized, "chips": chips,
+        "n_params": cfg.n_params(), "n_active_params": n_act,
+        "compile_s": time.time() - t0,
+        "memory_analysis": {
+            "argument_bytes_per_dev": mem.argument_size_in_bytes,
+            "output_bytes_per_dev": mem.output_size_in_bytes,
+            "temp_bytes_per_dev": mem.temp_size_in_bytes,
+            "alias_bytes_per_dev": mem.alias_size_in_bytes,
+            "peak_bytes_per_dev": (mem.argument_size_in_bytes
+                                   + mem.output_size_in_bytes
+                                   + mem.temp_size_in_bytes
+                                   - mem.alias_size_in_bytes),
+        },
+        "roofline": rl.to_dict(),
+    }
+    with open(out_path, "w") as f:
+        json.dump(rec, f, indent=1)
+    if verbose:
+        peak = rec["memory_analysis"]["peak_bytes_per_dev"] / 2**30
+        print(f"[dryrun] {tag}: OK compile={rec['compile_s']:.1f}s "
+              f"peak={peak:.2f}GiB/dev "
+              f"terms(c/m/n)={rl.compute_s:.4f}/{rl.memory_s:.4f}/"
+              f"{rl.collective_s:.4f}s bound={rl.bottleneck} "
+              f"frac={rl.roofline_fraction:.3f}")
+        print(f"  memory_analysis: {mem}")
+        ca = compiled.cost_analysis() or {}
+        print(f"  cost_analysis: flops={ca.get('flops', 0):.3e} "
+              f"bytes={ca.get('bytes accessed', 0):.3e}")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--quantized", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--out", default=ARTIFACT_DIR)
+    args = ap.parse_args()
+
+    if args.all:
+        cells = [(a, s, mp) for a in list_archs() for s in SHAPES
+                 for mp in (False, True)]
+    else:
+        meshes = (False, True) if args.both_meshes else (args.multi_pod,)
+        cells = [(args.arch, args.shape, mp) for mp in meshes]
+
+    failures = []
+    for arch, shape, mp in cells:
+        mesh_name = "multi_pod_2x16x16" if mp else "single_pod_16x16"
+        tag = f"{arch}__{shape}__{mesh_name}" + ("__msb4" if args.quantized else "")
+        if args.skip_existing and os.path.exists(
+                os.path.join(args.out, tag + ".json")):
+            print(f"[dryrun] {tag}: cached")
+            continue
+        try:
+            run_cell(arch, shape, multi_pod=mp, quantized=args.quantized,
+                     out_dir=args.out)
+        except Exception as e:  # noqa: BLE001 — report all failures at end
+            failures.append((tag, repr(e)))
+            print(f"[dryrun] {tag}: FAIL {e}")
+            traceback.print_exc()
+    if failures:
+        print(f"\n[dryrun] {len(failures)} FAILURES:")
+        for tag, err in failures:
+            print(f"  {tag}: {err[:200]}")
+        raise SystemExit(1)
+    print("\n[dryrun] all cells OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,323 @@
+"""Loop-aware cost model over compiled HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts every computation **once** — a
+``while`` body executed L times (our scan-over-layers, chunked attention,
+chunked CE, SSM chunk scans) is charged 1/L of its true cost. This module
+re-derives FLOPs / HBM bytes / collective wire-bytes from the compiled HLO
+*with loop multipliers*:
+
+  1. parse the module into computations + instructions (result type, opcode,
+     operands, called computations, dot dims, replica groups);
+  2. read each while loop's trip count from its recorded
+     ``backend_config.known_trip_count`` (fallback: the constant bound in
+     the condition computation);
+  3. fold costs bottom-up: cost(comp) = sum(inst) + trip * cost(body).
+
+FLOPs: dot/convolution terms (2 * prod(result) * contracted) + elementwise
+(1 flop/output element). Bytes: operands + results of materialized (top-
+level, non-fusion-internal) instructions — post-fusion HLO means each such
+instruction is an HBM round trip. Collectives: per-op wire factors as in
+roofline.py. Validated against analytic 6ND in tests/test_roofline.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z]+\d*)\[([\d,]*)\]")
+_INST_RE = re.compile(
+    r"^\s*(?P<root>ROOT\s+)?%?(?P<name>[\w.\-]+)\s*=\s*(?P<type>\([^)]*\)|[a-z]+\d*\[[\d,]*\]"
+    r"(?:\{[^}]*\})?)\s*(?P<op>[\w\-]+)\((?P<rest>.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*->.*\{\s*$")
+_TRIP_RE = re.compile(r'known_trip_count":\{"n":"(\d+)"')
+_CALLED_RE = re.compile(
+    r"(?:to_apply=|body=|condition=|calls=|called_computations=\{)"
+    r"%?([\w.\-]+)")
+_GROUPS_RE = re.compile(r"replica_groups=(?:\[(\d+),(\d+)\]|\{\{([\d,]+)\})")
+_DOT_DIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+
+def _shape_info(type_str):
+    """(total_elems, total_bytes, dims_of_first_array)."""
+    elems, byts, first = 0, 0, None
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims_s = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = [int(d) for d in dims_s.split(",") if d]
+        n = math.prod(dims) if dims else 1
+        elems += n
+        byts += n * _DTYPE_BYTES[dt]
+        if first is None:
+            first = dims
+    return elems, byts, first if first is not None else []
+
+
+@dataclasses.dataclass
+class Inst:
+    name: str
+    op: str
+    out_elems: int
+    out_bytes: int
+    out_dims: list
+    operands: List[str]
+    called: List[str]
+    flops: float
+    group_size: int
+    line: str
+    is_root: bool = False
+
+
+@dataclasses.dataclass
+class Comp:
+    name: str
+    insts: List[Inst]
+    is_fusion_body: bool = False
+
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "exponential",
+    "tanh", "negate", "abs", "compare", "select", "and", "or", "xor", "power",
+    "log", "rsqrt", "sqrt", "convert", "sign", "floor", "clamp",
+    "shift-left", "shift-right-logical", "shift-right-arithmetic",
+}
+_FLOP_REDUCE = {"reduce", "reduce-window"}
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def parse_module(text: str) -> Dict[str, Comp]:
+    comps: Dict[str, Comp] = {}
+    cur: Optional[Comp] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        mc = _COMP_RE.match(line.strip()) if line.strip().endswith("{") else None
+        if mc:
+            cur = Comp(mc.group(1), [])
+            comps[cur.name] = cur
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        mi = _INST_RE.match(line)
+        if not mi:
+            continue
+        name, type_str, op = mi.group("name"), mi.group("type"), mi.group("op")
+        rest = mi.group("rest")
+        out_elems, out_bytes, out_dims = _shape_info(type_str)
+        close = rest.find(")")
+        operands = re.findall(r"%([\w.\-]+)",
+                              rest[:close] if close >= 0 else rest)
+        called = _CALLED_RE.findall(rest)
+        gm = _GROUPS_RE.search(rest)
+        if gm:
+            gsize = int(gm.group(2)) if gm.group(2) else \
+                len(gm.group(3).split(","))
+        else:
+            gsize = 0
+        flops = 0.0
+        if op in ("dot", "convolution"):
+            # flops = 2 * prod(result dims) * contracted-dim product
+            dd = _DOT_DIMS_RE.search(rest)
+            contracted = 1
+            if dd is not None and dd.group(1):
+                # operand shapes resolved in the fold pass (need symbol table)
+                contracted = -1   # marker: resolve later
+            flops = -1.0 if contracted == -1 else 2.0 * out_elems
+        elif op in _ELEMENTWISE or op in _FLOP_REDUCE:
+            flops = float(out_elems)
+        cur.insts.append(Inst(name, op, out_elems, out_bytes, out_dims,
+                              operands, called, flops, gsize, line,
+                              is_root=bool(mi.group("root"))))
+    return comps
+
+
+def _resolve_dot_flops(comp: Comp, symtab: Dict[str, Inst]):
+    for inst in comp.insts:
+        if inst.flops == -1.0:
+            dd = _DOT_DIMS_RE.search(inst.line)
+            contracted = 1
+            if dd and dd.group(1) and inst.operands:
+                lhs = symtab.get(inst.operands[0])
+                if lhs is not None and lhs.out_dims:
+                    for ax in (int(a) for a in dd.group(1).split(",") if a):
+                        if ax < len(lhs.out_dims):
+                            contracted *= lhs.out_dims[ax]
+            inst.flops = 2.0 * inst.out_elems * max(contracted, 1)
+
+
+def _trip_count(cond: Comp) -> int:
+    """Largest integer constant in the loop condition ~ the trip bound."""
+    best = 1
+    for inst in cond.insts:
+        if inst.op == "constant":
+            m = re.search(r"constant\((\d+)\)", inst.line)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: Dict[str, dict] = dataclasses.field(default_factory=dict)
+
+    def add(self, other, mult=1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        for op, rec in other.coll.items():
+            mine = self.coll.setdefault(
+                op, {"count": 0.0, "result_bytes": 0.0, "wire_bytes": 0.0})
+            for k in mine:
+                mine[k] += rec[k] * mult
+
+    @property
+    def wire_bytes(self):
+        return sum(r["wire_bytes"] for r in self.coll.values())
+
+
+def _wire(op, size, n):
+    n = max(n, 2)
+    if op == "all-reduce":
+        return 2.0 * size * (n - 1) / n
+    if op == "all-gather":
+        return size * (n - 1) / n
+    if op == "reduce-scatter":
+        return float(size) * (n - 1)
+    if op == "all-to-all":
+        return size * (n - 1) / n
+    return float(size)
+
+
+def analyze(text: str) -> Cost:
+    comps = parse_module(text)
+    symtab: Dict[str, Inst] = {}
+    for c in comps.values():
+        for inst in c.insts:
+            symtab[inst.name] = inst
+    for c in comps.values():
+        _resolve_dot_flops(c, symtab)
+
+    # identify fusion bodies (called via `fusion` op kind=...) — their
+    # interior doesn't touch HBM; flops still count, bytes don't
+    fusion_bodies = set()
+    for c in comps.values():
+        for inst in c.insts:
+            if inst.op == "fusion":
+                fusion_bodies.update(inst.called)
+
+    # in-place accumulator fusions: root is a dynamic-update-slice writing a
+    # slice into a loop-carried buffer. Real HBM traffic = the update slice,
+    # not the (aliased) full buffer the HLO type shows.
+    dus_update_bytes: Dict[str, int] = {}
+    for c in comps.values():
+        if not c.insts:
+            continue
+        local = {i.name: i for i in c.insts}
+        root = next((i for i in c.insts if i.is_root), c.insts[-1])
+
+        def _dus_bytes(inst):
+            if inst.op == "dynamic-update-slice" and len(inst.operands) >= 2:
+                upd = local.get(inst.operands[1])
+                return upd.out_bytes if upd is not None else inst.out_bytes
+            return None
+
+        b = _dus_bytes(root)
+        if b is not None:
+            dus_update_bytes[c.name] = b
+        elif root.op == "tuple":
+            # multi-output accumulator fusion: sum DUS update sizes +
+            # full sizes of the non-DUS outputs
+            total, any_dus = 0, False
+            for oname in root.operands:
+                oin = local.get(oname)
+                if oin is None:
+                    continue
+                ob = _dus_bytes(oin)
+                if ob is not None:
+                    any_dus = True
+                    total += ob
+                else:
+                    total += oin.out_bytes
+            if any_dus:
+                dus_update_bytes[c.name] = total
+
+    memo: Dict[Tuple[str, bool], Cost] = {}
+
+    def fold(name: str, in_fusion: bool) -> Cost:
+        key = (name, in_fusion)
+        if key in memo:
+            return memo[key]
+        comp = comps.get(name)
+        cost = Cost()
+        memo[key] = cost
+        if comp is None:
+            return cost
+        for inst in comp.insts:
+            if inst.op == "while":
+                mb = re.search(r"body=%?([\w.\-]+)", inst.line)
+                mt = _TRIP_RE.search(inst.line)
+                if mt:
+                    trip = int(mt.group(1))
+                else:
+                    mcnd = re.search(r"condition=%?([\w.\-]+)", inst.line)
+                    trip = (_trip_count(comps[mcnd.group(1)])
+                            if mcnd and mcnd.group(1) in comps else 1)
+                if mb:
+                    cost.add(fold(mb.group(1), in_fusion), mult=trip)
+                continue
+            if inst.op in ("fusion", "call", "custom-call", "map",
+                           "conditional", "sort", "reduce", "scatter",
+                           "select-and-scatter", "reduce-window"):
+                for sub in inst.called:
+                    cost.add(fold(sub, in_fusion or inst.op == "fusion"))
+            if inst.op in _COLLECTIVES or any(
+                    inst.op == c + "-start" for c in _COLLECTIVES):
+                base = inst.op.replace("-start", "")
+                size = inst.out_bytes
+                rec = cost.coll.setdefault(
+                    base, {"count": 0.0, "result_bytes": 0.0,
+                           "wire_bytes": 0.0})
+                rec["count"] += 1
+                rec["result_bytes"] += size
+                rec["wire_bytes"] += _wire(base, size, inst.group_size)
+            cost.flops += max(inst.flops, 0.0)
+            if not in_fusion and inst.op not in (
+                    "parameter", "constant", "get-tuple-element", "tuple",
+                    "bitcast"):
+                out_bytes = inst.out_bytes
+                if inst.op in ("fusion", "dynamic-update-slice"):
+                    upd = (dus_update_bytes.get(inst.called[0])
+                           if inst.op == "fusion" and inst.called else None)
+                    if inst.op == "dynamic-update-slice" and \
+                            len(inst.operands) >= 2:
+                        upd = symtab[inst.operands[1]].out_bytes \
+                            if inst.operands[1] in symtab else None
+                    if upd is not None:
+                        out_bytes = upd   # in-place slice write
+                opnd_bytes = sum(symtab[o].out_bytes for o in inst.operands
+                                 if o in symtab)
+                if inst.op in ("fusion", "dynamic-update-slice",
+                               "dynamic-slice"):
+                    # fusions typically *slice* big operands (loop-carried
+                    # buffers) — charge the streamed volume, not the buffer
+                    opnd_bytes = min(opnd_bytes, 3 * out_bytes)
+                cost.bytes += out_bytes + opnd_bytes
+        return cost
+
+    # the ENTRY computation is conventionally named *main*; fall back to the
+    # last computation in the module
+    names = list(comps)
+    entry = next((n for n in names if "main" in n), names[-1])
+    return fold(entry, False)

@@ -1,0 +1,36 @@
+"""Production mesh construction (assignment spec).
+
+single-pod : (16, 16)     ("data", "model")          = 256 chips
+multi-pod  : (2, 16, 16)  ("pod", "data", "model")   = 512 chips
+
+Defined as a function so importing this module never touches jax device
+state (the dry-run sets XLA_FLAGS before any jax initialization).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(shape=None, axes=("data", "model")):
+    """Small mesh over whatever local devices exist (tests/examples)."""
+    n = len(jax.devices())
+    if shape is None:
+        d = 1
+        while d * d * 4 <= n:
+            d *= 2
+        shape = (max(n // 2, 1), 2) if n >= 2 else (1, 1)
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+# v5e hardware constants used by the roofline (assignment spec)
+PEAK_FLOPS_BF16 = 197e12        # per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW = 50e9                   # bytes/s per link

@@ -1,0 +1,168 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), all in seconds (assignment formulas):
+
+    compute    = HLO_FLOPs / (chips * 197e12)
+    memory     = HLO_bytes / (chips * 819e9)
+    collective = sum_op collective_bytes(op) / (chips * 50e9)
+
+``compiled.cost_analysis()`` is per-partition (verified empirically), so the
+per-chip terms use it directly. Collective bytes are parsed from the
+compiled HLO text with per-op wire factors:
+
+    all-reduce          2 (n-1)/n * size
+    all-gather          (n-1)/n * output size
+    reduce-scatter      (n-1)   * output size     (input = n * output)
+    all-to-all          (n-1)/n * size
+    collective-permute  1       * size
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict
+
+from .mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s+(?P<types>\([^)]*\)|\S+)\s+"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\(")
+_SHAPE_RE = re.compile(r"(?P<dt>[a-z]+\d*)\[(?P<dims>[\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=(?:\[(\d+),(\d+)\]|\{\{([\d,]+)\})")
+
+
+def _type_bytes(types: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(types):
+        dt = m.group("dt")
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = m.group("dims")
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, dict]:
+    """Sum per-op result bytes and wire bytes from compiled HLO."""
+    out: Dict[str, dict] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if m is None or "-done" in line:
+            continue
+        op = m.group("op")
+        size = _type_bytes(m.group("types"))
+        gm = _GROUPS_RE.search(line)
+        if gm:
+            n = int(gm.group(2)) if gm.group(2) else len(gm.group(3).split(","))
+        else:
+            n = 2
+        n = max(n, 2)
+        if op == "all-reduce":
+            wire = 2.0 * size * (n - 1) / n
+        elif op == "all-gather":
+            wire = size * (n - 1) / n
+        elif op == "reduce-scatter":
+            wire = float(size) * (n - 1)
+        elif op == "all-to-all":
+            wire = size * (n - 1) / n
+        else:  # collective-permute
+            wire = float(size)
+        rec = out.setdefault(op, {"count": 0, "result_bytes": 0,
+                                  "wire_bytes": 0.0})
+        rec["count"] += 1
+        rec["result_bytes"] += size
+        rec["wire_bytes"] += wire
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_chip: float
+    bytes_per_chip: float
+    wire_bytes_per_chip: float
+    collectives: Dict[str, dict]
+    model_flops_total: float
+    chips: int
+    xla_flops_per_chip: float = 0.0
+    xla_bytes_per_chip: float = 0.0
+
+    @property
+    def compute_s(self):
+        return self.flops_per_chip / PEAK_FLOPS_BF16
+
+    @property
+    def memory_s(self):
+        return self.bytes_per_chip / HBM_BW
+
+    @property
+    def collective_s(self):
+        return self.wire_bytes_per_chip / ICI_BW
+
+    @property
+    def bottleneck(self):
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self):
+        """MODEL_FLOPS / HLO_FLOPs — remat/recompute/dispatch waste."""
+        hlo_total = self.flops_per_chip * self.chips
+        return self.model_flops_total / hlo_total if hlo_total else 0.0
+
+    @property
+    def roofline_fraction(self):
+        """max-term time assuming perfect overlap: useful compute time /
+        bound time — the score we hillclimb."""
+        bound = max(self.compute_s, self.memory_s, self.collective_s)
+        ideal = (self.model_flops_total / self.chips) / PEAK_FLOPS_BF16
+        return ideal / bound if bound else 0.0
+
+    def to_dict(self):
+        return {
+            "flops_per_chip": self.flops_per_chip,
+            "bytes_per_chip": self.bytes_per_chip,
+            "wire_bytes_per_chip": self.wire_bytes_per_chip,
+            "collectives": self.collectives,
+            "model_flops_total": self.model_flops_total,
+            "chips": self.chips,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "bottleneck": self.bottleneck,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "xla_flops_per_chip": self.xla_flops_per_chip,
+            "xla_bytes_per_chip": self.xla_bytes_per_chip,
+        }
+
+
+def build(compiled, model_flops_total, chips):
+    """Loop-aware costs from the compiled HLO (launch/hlo_cost.py).
+
+    XLA's own cost_analysis() charges each while body once (a scan over L
+    layers is undercounted Lx); hlo_cost multiplies through the recorded
+    known_trip_counts. The raw XLA numbers are kept as `xla_*` cross-checks.
+    """
+    from . import hlo_cost
+    text = compiled.as_text()
+    cost = hlo_cost.analyze(text)
+    ca = compiled.cost_analysis() or {}
+    rl = Roofline(flops_per_chip=cost.flops, bytes_per_chip=cost.bytes,
+                  wire_bytes_per_chip=cost.wire_bytes, collectives=cost.coll,
+                  model_flops_total=model_flops_total, chips=chips)
+    rl.xla_flops_per_chip = float(ca.get("flops", 0.0))
+    rl.xla_bytes_per_chip = float(ca.get("bytes accessed", 0.0))
+    return rl

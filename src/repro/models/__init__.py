@@ -1,0 +1,3 @@
+from .model import Model
+from .transformer import init_params, param_axes, param_shapes
+from .attention import decode_attention, flash_attention

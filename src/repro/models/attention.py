@@ -1,0 +1,268 @@
+"""Chunked (flash-style) attention in pure JAX with a custom VJP.
+
+This is the reference implementation the Pallas kernel
+(kernels/flash_attention) is validated against, and the path used for the
+multi-pod dry-run (XLA cost analysis must see the real FLOPs — a Pallas
+custom-call would hide them; see DESIGN.md Sec. 7).
+
+Features needed by the assigned architectures:
+  * GQA (n_kv_heads <= n_heads)
+  * causal masking, non-causal (whisper encoder / cross-attention)
+  * sliding-window (gemma2 local layers) with a *traced* window size so the
+    alternating local/global stack stays a single scan body
+  * attention logit soft-capping (gemma2)
+
+Both q and kv are chunked; the backward pass recomputes scores per chunk
+pair (FlashAttention-2 style), so live memory is O(chunk^2), never O(S^2).
+The causal variant processes the full chunk grid with masking (~2x waste);
+the Pallas kernel prunes fully-masked tiles on real TPUs — recorded as a
+perf-iteration item in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+_NEG_INF = -2.0e38
+
+
+def _softcap(s, cap):
+    return jnp.where(cap > 0, cap * jnp.tanh(s / jnp.maximum(cap, 1e-6)), s)
+
+
+def _mask(qpos, kpos, causal, window):
+    # window is a traced scalar; 0 => no window (global layer)
+    m = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    if causal:
+        m &= kpos[None, :] <= qpos[:, None]
+    m &= (window <= 0) | (kpos[None, :] > qpos[:, None] - window)
+    return m
+
+
+def _chunk_scores(qc, kc, qpos, kpos, *, causal, window, softcap, scale):
+    # qc: (B, cq, H, d)  kc: (B, ck, KV, d); H = KV * rep
+    b, cq, h, d = qc.shape
+    kv = kc.shape[2]
+    rep = h // kv
+    qh = qc.reshape(b, cq, kv, rep, d)
+    s = jnp.einsum("bqkrd,bskd->bqkrs", qh.astype(jnp.float32),
+                   kc.astype(jnp.float32)) * scale
+    s = _softcap(s, softcap)
+    m = _mask(qpos, kpos, causal, window)          # (cq, ck)
+    return jnp.where(m[None, :, None, None, :], s, _NEG_INF)
+
+
+def _fa_fwd_impl(q, k, v, *, causal, window, q_offset, softcap, scale,
+                 chunk_q, chunk_kv):
+    b, sq, h, d = q.shape
+    skv, kv = k.shape[1], k.shape[2]
+    nq, nk = sq // chunk_q, skv // chunk_kv
+    rep = h // kv
+
+    qr = q.reshape(b, nq, chunk_q, h, d)
+
+    def q_step(_, iq):
+        qc = qr[:, iq]
+        qpos = q_offset + iq * chunk_q + jnp.arange(chunk_q)
+
+        def kv_step(carry, ik):
+            acc, m_i, l_i = carry
+            kc = jax.lax.dynamic_slice_in_dim(k, ik * chunk_kv, chunk_kv, 1)
+            vc = jax.lax.dynamic_slice_in_dim(v, ik * chunk_kv, chunk_kv, 1)
+            kpos = ik * chunk_kv + jnp.arange(chunk_kv)
+            s = _chunk_scores(qc, kc, qpos, kpos, causal=causal,
+                              window=window, softcap=softcap, scale=scale)
+            m_new = jnp.maximum(m_i, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m_i - m_new)
+            l_new = l_i * corr + jnp.sum(p, axis=-1)
+            # p in the value dtype for the PV dot (f32 accumulation) —
+            # halves the probability-matrix traffic, same as the kernel
+            pv = jnp.einsum("bqkrs,bskd->bqkrd", p.astype(vc.dtype), vc,
+                            preferred_element_type=jnp.float32)
+            acc = acc * corr[..., None] + pv
+            return (acc, m_new, l_new), None
+
+        acc0 = jnp.zeros((b, chunk_q, kv, rep, d), jnp.float32)
+        m0 = jnp.full((b, chunk_q, kv, rep), _NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, chunk_q, kv, rep), jnp.float32)
+        (acc, m_i, l_i), _ = jax.lax.scan(kv_step, (acc0, m0, l0),
+                                          jnp.arange(nk))
+        l_safe = jnp.maximum(l_i, 1e-30)
+        out = (acc / l_safe[..., None]).reshape(b, chunk_q, h, d)
+        lse = (m_i + jnp.log(l_safe)).reshape(b, chunk_q, h)
+        return None, (out, lse)
+
+    _, (out, lse) = jax.lax.scan(q_step, None, jnp.arange(nq))
+    # out: (nq, B, cq, H, d) -> (B, Sq, H, d)
+    out = jnp.moveaxis(out, 0, 1).reshape(b, sq, h, d).astype(q.dtype)
+    lse = jnp.moveaxis(lse, 0, 1).reshape(b, sq, h)
+    return out, lse
+
+
+@functools.partial(jax.custom_vjp,
+                   nondiff_argnums=(3, 6, 7, 8, 9))
+def _flash(q, k, v, causal, window, q_offset, softcap, scale, chunk_q,
+           chunk_kv):
+    out, _ = _fa_fwd_impl(q, k, v, causal=causal, window=window,
+                          q_offset=q_offset, softcap=softcap, scale=scale,
+                          chunk_q=chunk_q, chunk_kv=chunk_kv)
+    return out
+
+
+def _flash_fwd(q, k, v, causal, window, q_offset, softcap, scale, chunk_q,
+               chunk_kv):
+    out, lse = _fa_fwd_impl(q, k, v, causal=causal, window=window,
+                            q_offset=q_offset, softcap=softcap, scale=scale,
+                            chunk_q=chunk_q, chunk_kv=chunk_kv)
+    return out, (q, k, v, out, lse, window, q_offset)
+
+
+def _flash_bwd(causal, softcap, scale, chunk_q, chunk_kv, res, dout):
+    q, k, v, out, lse, window, q_offset = res
+    b, sq, h, d = q.shape
+    skv, kv = k.shape[1], k.shape[2]
+    nq, nk = sq // chunk_q, skv // chunk_kv
+    rep = h // kv
+
+    delta = jnp.sum(dout.astype(jnp.float32) * out.astype(jnp.float32),
+                    axis=-1)                                    # (B, Sq, H)
+    qr = q.reshape(b, nq, chunk_q, h, d)
+    dor = dout.reshape(b, nq, chunk_q, h, d).astype(jnp.float32)
+    lser = lse.reshape(b, nq, chunk_q, kv, rep)
+    deltar = delta.reshape(b, nq, chunk_q, kv, rep)
+
+    def q_step(carry, iq):
+        dk_acc, dv_acc = carry
+        qc = qr[:, iq]
+        doc = dor[:, iq].reshape(b, chunk_q, kv, rep, d)
+        lsec, deltac = lser[:, iq], deltar[:, iq]
+        qpos = q_offset + iq * chunk_q + jnp.arange(chunk_q)
+
+        def kv_step(carry2, ik):
+            dq_c, dk_a, dv_a = carry2
+            kc = jax.lax.dynamic_slice_in_dim(k, ik * chunk_kv, chunk_kv, 1)
+            vc = jax.lax.dynamic_slice_in_dim(v, ik * chunk_kv, chunk_kv, 1)
+            kpos = ik * chunk_kv + jnp.arange(chunk_kv)
+            qh = qc.reshape(b, chunk_q, kv, rep, d).astype(jnp.float32)
+            s_raw = jnp.einsum("bqkrd,bskd->bqkrs", qh,
+                               kc.astype(jnp.float32)) * scale
+            s = _softcap(s_raw, softcap)
+            m = _mask(qpos, kpos, causal, window)
+            s = jnp.where(m[None, :, None, None, :], s, _NEG_INF)
+            p = jnp.exp(s - lsec[..., None])                    # (b,cq,kv,rep,ck)
+            dp = jnp.einsum("bqkrd,bskd->bqkrs", doc, vc.astype(jnp.float32))
+            ds = p * (dp - deltac[..., None])
+            if True:  # softcap gradient (no-op when softcap == 0)
+                cap_grad = jnp.where(
+                    softcap > 0,
+                    1.0 - jnp.tanh(s_raw / jnp.maximum(softcap, 1e-6)) ** 2,
+                    1.0)
+                ds = ds * cap_grad
+            ds = jnp.where(m[None, :, None, None, :], ds, 0.0)
+            dq_c = dq_c + scale * jnp.einsum("bqkrs,bskd->bqkrd", ds,
+                                             kc.astype(jnp.float32))
+            dk_c = scale * jnp.einsum("bqkrs,bqkrd->bskd", ds, qh)
+            dv_c = jnp.einsum("bqkrs,bqkrd->bskd", p, doc)
+            dk_a = jax.lax.dynamic_update_slice_in_dim(
+                dk_a, jax.lax.dynamic_slice_in_dim(dk_a, ik * chunk_kv,
+                                                   chunk_kv, 1) + dk_c,
+                ik * chunk_kv, 1)
+            dv_a = jax.lax.dynamic_update_slice_in_dim(
+                dv_a, jax.lax.dynamic_slice_in_dim(dv_a, ik * chunk_kv,
+                                                   chunk_kv, 1) + dv_c,
+                ik * chunk_kv, 1)
+            return (dq_c, dk_a, dv_a), None
+
+        dq0 = jnp.zeros((b, chunk_q, kv, rep, d), jnp.float32)
+        (dq_c, dk_acc, dv_acc), _ = jax.lax.scan(
+            kv_step, (dq0, dk_acc, dv_acc), jnp.arange(nk))
+        return (dk_acc, dv_acc), dq_c.reshape(b, chunk_q, h, d)
+
+    dk0 = jnp.zeros((b, skv, kv, d), jnp.float32)
+    dv0 = jnp.zeros((b, skv, kv, d), jnp.float32)
+    (dk, dv), dq = jax.lax.scan(q_step, (dk0, dv0), jnp.arange(nq))
+    dq = jnp.moveaxis(dq, 0, 1).reshape(b, sq, h, d).astype(q.dtype)
+    return dq, dk.astype(k.dtype), dv.astype(v.dtype), None, None
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
+                    scale=None, chunk_q=512, chunk_kv=512, q_offset=0):
+    """Chunked attention. q: (B,Sq,H,d), k/v: (B,Skv,KV,d) -> (B,Sq,H,d).
+
+    ``window`` and ``q_offset`` may be traced scalars (context parallelism
+    passes the rank's global query offset). Sequence lengths are padded
+    internally to chunk multiples.
+    """
+    def _divisor_chunk(n, target):
+        c = min(target, n)
+        while n % c:
+            c -= 1
+        return c
+
+    b, sq, h, d = q.shape
+    skv = k.shape[1]
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    # chunk sizes must divide the (padded) lengths; padded q rows are dropped
+    # at the end, and padded *keys* are hidden by the causal mask (sq == skv
+    # there). Non-causal (cross-attention) picks an exactly-dividing chunk.
+    if causal:
+        cq = min(chunk_q, sq)
+        ck = min(chunk_kv, skv)
+        pq, pk = (-sq) % cq, (-skv) % ck
+        if pq:
+            q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+        if pk:
+            k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    else:
+        cq = _divisor_chunk(sq, chunk_q)
+        ck = _divisor_chunk(skv, chunk_kv)
+    window = jnp.asarray(window, jnp.int32)
+    q_offset = jnp.asarray(q_offset, jnp.int32)
+    out = _flash(q, k, v, causal, window, q_offset, float(softcap),
+                 float(scale), cq, ck)
+    return out[:, :sq]
+
+
+def decode_attention(q, k_cache, v_cache, positions, cur_pos, *, window=0,
+                     softcap=0.0, scale=None, chunk_kv=None):
+    """Single-token attention against a (possibly huge) KV cache.
+
+    q: (B, 1, H, d); caches: (B, S, KV, d); positions: (B, S) int32 position
+    of each cache entry (ring-buffer layout, -1 = empty); cur_pos: (B,).
+
+    Written as plain einsums over the full cache: the score tensor for one
+    query token is only (B, H, S) — tiny per chip once the cache's seq dim
+    is sharded (kv_seq takes every idle mesh axis; long_500k shards it
+    512-way). XLA turns the softmax + PV reductions over the sharded S into
+    the flash-decode psum combine automatically.
+    """
+    del chunk_kv
+    b, s, kv, d = k_cache.shape
+    h = q.shape[2]
+    rep = h // kv
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    window = jnp.asarray(window, jnp.int32)
+    # keep einsum INPUTS in the cache dtype with f32 accumulation — an
+    # .astype(f32) on the cache makes XLA materialize a full f32 cache copy
+    # (+ convert back) every layer (measured: 80x 2.7 GB/step; §Perf)
+    qh = q.reshape(b, kv, rep, d).astype(k_cache.dtype)
+    sc_ = jnp.einsum("bkrd,bskd->bkrs", qh, k_cache,
+                     preferred_element_type=jnp.float32) * scale
+    sc_ = _softcap(sc_, softcap)
+    valid = (positions <= cur_pos[:, None]) & (positions >= 0)
+    valid &= (window <= 0) | (positions > cur_pos[:, None] - window)
+    sc_ = jnp.where(valid[:, None, None, :], sc_, _NEG_INF)
+    m = jnp.max(sc_, axis=-1, keepdims=True)
+    p = jnp.exp(sc_ - m)
+    l = jnp.sum(p, axis=-1)
+    out = jnp.einsum("bkrs,bskd->bkrd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    out = out / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, 1, h, d).astype(q.dtype)

@@ -1,0 +1,267 @@
+"""Top-level Model API: init / loss / prefill / decode_step / input_specs.
+
+The three entry points the launcher lowers, per shape kind:
+  train_*   -> train_step (see train/) built on ``Model.loss``
+  prefill_* -> ``Model.prefill`` (forward + cache collection)
+  decode_*  -> ``Model.decode_step`` (one token against a seq_len cache)
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig, ShapeConfig
+from . import ssm, xlstm
+from .layers import chunked_softmax_xent, rms_norm
+from .transformer import (forward_stack, init_params, layer_plan, n_periods,
+                          param_axes, param_shapes)
+
+
+def _sinusoid(positions, d):
+    half = d // 2
+    freq = jnp.exp(-math.log(10000.0) * jnp.arange(half, dtype=jnp.float32)
+                   / max(half - 1, 1))
+    ang = positions[..., None].astype(jnp.float32) * freq
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _has_attn(cfg):
+    return any(m in ("attn", "enc_attn")
+               for m, _ in layer_plan(cfg, "dec"))
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # -- params ------------------------------------------------------------
+    def init(self, rng):
+        return init_params(self.cfg, rng)
+
+    def param_axes(self):
+        return param_axes(self.cfg)
+
+    def param_shapes(self):
+        return param_shapes(self.cfg)
+
+    # -- shared pieces -----------------------------------------------------
+    def _embed(self, params, tokens):
+        from ..core.quantize import QTensor
+        cfg = self.cfg
+        table = params["embed"]
+        if isinstance(table, QTensor):   # quantize-on-load serving
+            table = table.dequantize()
+        e = jnp.take(table, tokens, axis=0).astype(cfg.dtype)
+        return e * jnp.asarray(cfg.embed_scale, cfg.dtype)
+
+    def _unembed_vd(self, params):
+        from ..core.quantize import QTensor
+        table = params.get("unembed", params["embed"])
+        if isinstance(table, QTensor):
+            table = table.dequantize()
+        return table
+
+    def _assemble_inputs(self, params, batch):
+        """Token/frontend fusion -> (x (B,S,D), labels_mask_extra)."""
+        cfg = self.cfg
+        if cfg.frontend == "vision":
+            patches = batch["patch_embeds"].astype(cfg.dtype)
+            toks = self._embed(params, batch["tokens"])
+            x = jnp.concatenate([patches, toks], axis=1)
+        elif cfg.frontend == "audio" and not cfg.is_encdec:
+            x = batch["frames"].astype(cfg.dtype)
+        else:
+            x = self._embed(params, batch["tokens"])
+        return x
+
+    def _encoder(self, params, batch, parallel):
+        cfg = self.cfg
+        frames = batch["frames"].astype(cfg.dtype)
+        s = frames.shape[1]
+        pos = jnp.arange(s)
+        x = frames + _sinusoid(pos, cfg.d_model)[None].astype(cfg.dtype)
+        x, _, _ = forward_stack(params["enc"], x, cfg, stack="enc",
+                                positions=pos, parallel=parallel)
+        return rms_norm(x, params["enc_final_norm"], cfg.norm_eps)
+
+    # -- training ----------------------------------------------------------
+    def loss(self, params, batch, parallel=None):
+        cfg = self.cfg
+        enc_out = self._encoder(params, batch, parallel) if cfg.is_encdec else None
+        x = self._assemble_inputs(params, batch)
+        s = x.shape[1]
+        positions = jnp.arange(s)
+        if not cfg.use_rope and not cfg.is_encdec and _has_attn(cfg):
+            x = x + _sinusoid(positions, cfg.d_model)[None].astype(cfg.dtype)
+        if cfg.is_encdec:
+            x = x + _sinusoid(positions, cfg.d_model)[None].astype(cfg.dtype)
+        x, _, aux = forward_stack(params["dec"], x, cfg, positions=positions,
+                                  parallel=parallel, enc_out=enc_out)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        labels = batch["labels"]
+        mask = (labels >= 0).astype(jnp.float32)
+        ce = chunked_softmax_xent(x, self._unembed_vd(params),
+                                  jnp.maximum(labels, 0), mask,
+                                  softcap=cfg.logit_softcap,
+                                  vocab_real=cfg.vocab_size)
+        loss = ce + cfg.router_aux_weight * aux
+        return loss, {"ce": ce, "router_aux": aux}
+
+    # -- serving -----------------------------------------------------------
+    def _logits(self, params, hidden):
+        cfg = self.cfg
+        logits = jnp.einsum("bd,vd->bv", hidden.astype(jnp.float32),
+                            self._unembed_vd(params).astype(jnp.float32))
+        if cfg.logit_softcap > 0:
+            logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+        vp = logits.shape[-1]
+        if cfg.vocab_size < vp:
+            logits = jnp.where(jnp.arange(vp) < cfg.vocab_size, logits, -jnp.inf)
+        return logits
+
+    def prefill(self, params, batch, parallel=None):
+        """Forward + cache collection. Returns (last_logits, cache)."""
+        cfg = self.cfg
+        enc_out = self._encoder(params, batch, parallel) if cfg.is_encdec else None
+        x = self._assemble_inputs(params, batch)
+        b, s = x.shape[0], x.shape[1]
+        positions = jnp.arange(s)
+        if (not cfg.use_rope or cfg.is_encdec) and _has_attn(cfg):
+            x = x + _sinusoid(positions, cfg.d_model)[None].astype(cfg.dtype)
+        x, layer_cache, _ = forward_stack(
+            params["dec"], x, cfg, positions=positions, parallel=parallel,
+            enc_out=enc_out, collect_cache=True)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = self._logits(params, x[:, -1])
+        cache = {"layers": layer_cache}
+        if _has_attn(cfg):
+            cache["pos"] = jnp.broadcast_to(
+                positions.astype(jnp.int32)[None], (b, s))
+        return logits, cache
+
+    def decode_step(self, params, cache, tokens, cur_pos, parallel=None):
+        """One decode step. tokens (B,1), cur_pos (B,). Returns (logits, cache)."""
+        cfg = self.cfg
+        x = self._embed(params, tokens)
+        if (not cfg.use_rope or cfg.is_encdec) and _has_attn(cfg):
+            x = x + _sinusoid(cur_pos[:, None], cfg.d_model).astype(cfg.dtype)
+        new_cache = dict(cache)
+        decode_positions = None
+        if _has_attn(cfg):
+            s = cache["pos"].shape[1]
+            slot = (cur_pos % s)[0]
+            decode_positions = jax.lax.dynamic_update_slice_in_dim(
+                cache["pos"], cur_pos[:, None].astype(jnp.int32), slot, 1)
+            new_cache["pos"] = decode_positions
+        x, layer_cache, _ = forward_stack(
+            params["dec"], x, cfg, positions=cur_pos[:, None],
+            parallel=parallel, cache=cache["layers"], cur_pos=cur_pos,
+            decode_positions=decode_positions)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = self._logits(params, x[:, -1])
+        new_cache["layers"] = layer_cache
+        return logits, new_cache
+
+    # -- cache specs ---------------------------------------------------------
+    def cache_defs(self, batch, seq_len):
+        """(shape, dtype, logical_axes) per cache leaf, nested like the cache."""
+        cfg = self.cfg
+        p = n_periods(cfg, "dec")
+        kv, hd = cfg.n_kv_heads, cfg.head_dim_
+        layers = {}
+        for slot, (mixer, _ffn) in enumerate(layer_plan(cfg, "dec")):
+            sl = {}
+            if mixer == "attn":
+                kvshape = (p, batch, seq_len, kv, hd)
+                ax = ("layers", "batch", "kv_seq", "heads", "head_dim")
+                sl["attn"] = {"k": (kvshape, cfg.dtype, ax),
+                              "v": (kvshape, cfg.dtype, ax)}
+            elif mixer == "mamba":
+                shapes = ssm.mamba_cache_shapes(cfg, batch)
+                ax = {"conv": ("layers", "batch", None, "mlp"),
+                      "ssm": ("layers", "batch", "mlp", None)}
+                sl["mamba"] = {k: ((p,) + shp, dt, ax[k])
+                               for k, (shp, dt) in shapes.items()}
+            elif mixer in ("slstm", "mlstm"):
+                shapes = xlstm.xlstm_cache_shapes(cfg, batch, mixer)
+                sl[mixer] = {k: ((p,) + shp, dt,
+                                 ("layers", "batch") + (None,) * (len(shp) - 1))
+                             for k, (shp, dt) in shapes.items()}
+            if cfg.is_encdec:
+                xshape = (p, batch, seq_len, kv, hd)
+                ax = ("layers", "batch", "kv_seq", "heads", "head_dim")
+                sl["xattn"] = {"k": (xshape, cfg.dtype, ax),
+                               "v": (xshape, cfg.dtype, ax)}
+            layers[f"s{slot}"] = sl
+        defs = {"layers": layers}
+        if _has_attn(cfg):
+            defs["pos"] = ((batch, seq_len), jnp.int32,
+                           ("batch", "kv_seq"))
+        return defs
+
+    def init_cache(self, batch, seq_len):
+        def build(d):
+            if isinstance(d, dict):
+                return {k: build(v) for k, v in d.items()}
+            shape, dt, _ax = d
+            if dt == jnp.int32:
+                return jnp.broadcast_to(
+                    jnp.arange(shape[-1], dtype=jnp.int32)[None], shape).copy()
+            return jnp.zeros(shape, dt)
+        return build(self.cache_defs(batch, seq_len))
+
+    # -- dry-run input specs -------------------------------------------------
+    def input_specs(self, shape: ShapeConfig):
+        """ShapeDtypeStruct stand-ins + logical axes for every entry-point arg."""
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        i32, dt = jnp.int32, cfg.dtype
+
+        def sds(shp, dtype):
+            return jax.ShapeDtypeStruct(shp, dtype)
+
+        if shape.kind in ("train", "prefill"):
+            batch, axes = {}, {}
+            if cfg.frontend == "vision":
+                p = cfg.n_frontend_tokens
+                batch["tokens"] = sds((b, s - p), i32)
+                axes["tokens"] = ("batch", None)
+                batch["patch_embeds"] = sds((b, p, cfg.d_model), dt)
+                axes["patch_embeds"] = ("batch", None, None)
+            elif cfg.is_encdec:
+                batch["tokens"] = sds((b, s), i32)
+                axes["tokens"] = ("batch", None)
+                batch["frames"] = sds((b, s, cfg.d_model), dt)
+                axes["frames"] = ("batch", None, None)
+            else:
+                batch["tokens"] = sds((b, s), i32)
+                axes["tokens"] = ("batch", None)
+            if shape.kind == "train":
+                batch["labels"] = sds((b, s), i32)
+                axes["labels"] = ("batch", None)
+            return batch, axes
+
+        # decode: (cache, tokens, cur_pos)
+        cache_defs = self.cache_defs(b, s)
+
+        def to_sds(d):
+            if isinstance(d, dict):
+                return {k: to_sds(v) for k, v in d.items()}
+            shp, dtp, _ = d
+            return sds(shp, dtp)
+
+        def to_axes(d):
+            if isinstance(d, dict):
+                return {k: to_axes(v) for k, v in d.items()}
+            return d[2]
+
+        batch = {"cache": to_sds(cache_defs), "tokens": sds((b, 1), i32),
+                 "cur_pos": sds((b,), i32)}
+        axes = {"cache": to_axes(cache_defs), "tokens": ("batch", None),
+                "cur_pos": ("batch",)}
+        return batch, axes

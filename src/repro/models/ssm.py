@@ -1,0 +1,149 @@
+"""Mamba (S6 selective state-space) block for the jamba hybrid.
+
+Training/prefill uses a parallel associative scan over the sequence
+(log-depth on TPU); decode carries (conv_state, ssm_state) and runs the
+single-step recurrence. The inner dim ``d_inner = expand * d_model`` is
+TP-sharded over ``model`` (all channels are independent in the scan).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense
+
+
+def _causal_conv1d(x, w, state=None):
+    """Depthwise causal conv. x: (B,S,C), w: (K,C). Returns (y, new_state)."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, x], axis=1)
+    # sum_{t} x[s - (k-1) + t] * w[t]
+    y = sum(xp[:, t:t + x.shape[1]] * w[t][None, None, :] for t in range(k))
+    new_state = xp[:, -(k - 1):] if k > 1 else jnp.zeros_like(pad)
+    return y, new_state
+
+
+def _ssm_scan(deltaA, deltaBx, h0=None):
+    """h_t = deltaA_t * h_{t-1} + deltaBx_t via associative scan over S.
+
+    deltaA/deltaBx: (B, S, C, N). Returns (all h (B,S,C,N), h_last).
+    (Used by tests/reference; the layer itself uses the chunked sequential
+    form below — the associative form's backward keeps all log-depth tree
+    stages live, ~10x the memory.)
+    """
+    if h0 is not None:
+        deltaBx = deltaBx.at[:, 0].add(deltaA[:, 0] * h0)
+
+    def combine(a, b):
+        (a1, b1), (a2, b2) = a, b
+        return a1 * a2, b2 + a2 * b1
+
+    _, h = jax.lax.associative_scan(combine, (deltaA, deltaBx), axis=1)
+    return h, h[:, -1]
+
+
+def _ssm_scan_seq(deltaA, deltaBx, h0):
+    """Sequential recurrence over the (short) chunk axis: O(B*C*N) live."""
+    def step(h, inp):
+        da, db = inp
+        h = da * h + db
+        return h, h
+
+    h_last, hs = jax.lax.scan(
+        step, h0, (jnp.moveaxis(deltaA, 1, 0), jnp.moveaxis(deltaBx, 1, 0)))
+    return jnp.moveaxis(hs, 0, 1), h_last
+
+
+def mamba_layer(p, x, cfg, cache=None, parallel=None):
+    """x: (B, S, D) -> (B, S, D). cache = dict(conv, ssm) for decode."""
+    from ..parallel.sharding import constraint
+    b, s, d = x.shape
+    d_in = cfg.mamba_d_inner
+    n = cfg.mamba_d_state
+    # two separate projections (never materialize a fused (B,S,2*d_in))
+    xi = dense(x, p["in_proj_x"])                     # (B,S,d_in)
+    z = dense(x, p["in_proj_z"])
+    # anchor TP on the inner channels (the scan runs over full S per shard)
+    xi = constraint(xi, ("batch", None, "mlp"), parallel)
+    z = constraint(z, ("batch", None, "mlp"), parallel)
+    conv_state = cache.get("conv") if cache else None
+    xi, new_conv = _causal_conv1d(xi, p["conv_w"], conv_state)
+    xi = jax.nn.silu(xi.astype(jnp.float32)).astype(x.dtype)
+
+    # input-dependent dt, B, C
+    proj = dense(xi, p["x_proj"])                     # (B,S,dt_rank+2N)
+    dt_low, bmat, cmat = jnp.split(
+        proj, [cfg.mamba_dt_rank, cfg.mamba_dt_rank + n], axis=-1)
+    dt = jax.nn.softplus(
+        dense(dt_low, p["dt_proj"]).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32))           # (B,S,d_in) f32
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))      # (d_in, N)
+
+    h0 = cache.get("ssm") if cache else jnp.zeros(
+        (b, xi.shape[-1], n), jnp.float32)
+    if cache is not None and s == 1:                  # single-step decode
+        deltaA = jnp.exp(dt[:, 0, :, None] * a[None])
+        deltaBx = (dt[:, 0] * xi[:, 0].astype(jnp.float32))[..., None] \
+            * bmat[:, 0].astype(jnp.float32)[:, None, :]
+        h_last = deltaA * cache["ssm"] + deltaBx
+        y = jnp.einsum("bcn,bn->bc", h_last,
+                       cmat[:, 0].astype(jnp.float32))[:, None]
+    else:
+        # chunked selective scan: the (B,chunk,C,N) discretized tensors are
+        # materialized one chunk at a time (remat'd), never for the full S
+        ck = min(cfg.mamba_chunk, s)
+        while s % ck:
+            ck -= 1
+        nc = s // ck
+
+        @jax.checkpoint
+        def chunk_body(h, inp):
+            dtc, xic, bc, cc = inp                    # (B,ck,...) bf16 streams
+            dtf = dtc.astype(jnp.float32)
+            deltaA = jnp.exp(dtf[..., None] * a[None, None])
+            deltaBx = (dtf * xic.astype(jnp.float32))[..., None] \
+                * bc.astype(jnp.float32)[:, :, None, :]
+            hs, h_new = _ssm_scan_seq(deltaA, deltaBx, h)
+            yc = jnp.einsum("bscn,bsn->bsc", hs, cc.astype(jnp.float32))
+            return h_new, yc.astype(cfg.dtype)
+
+        def split(t):
+            return jnp.moveaxis(t.reshape(b, nc, ck, *t.shape[2:]), 1, 0)
+
+        h_last, ys = jax.lax.scan(
+            chunk_body, h0,
+            (split(dt.astype(cfg.dtype)), split(xi), split(bmat), split(cmat)))
+        y = jnp.moveaxis(ys, 0, 1).reshape(b, s, -1).astype(jnp.float32)
+
+    y = y + p["d_skip"].astype(jnp.float32)[None, None] * xi.astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    out = dense(y, p["out_proj"])
+    # always return the recurrent state: prefill collects it as the cache
+    return out, {"conv": new_conv, "ssm": h_last}
+
+
+def mamba_param_defs(cfg, prefix):
+    """(shape, logical_axes, init) declarations — consumed by model.init."""
+    d, d_in = cfg.d_model, cfg.mamba_d_inner
+    n, k, r = cfg.mamba_d_state, cfg.mamba_d_conv, cfg.mamba_dt_rank
+    return {
+        f"{prefix}/in_proj_x": ((d, d_in), ("embed", "mlp"), "fan_in"),
+        f"{prefix}/in_proj_z": ((d, d_in), ("embed", "mlp"), "fan_in"),
+        f"{prefix}/conv_w": ((k, d_in), (None, "mlp"), "one"),
+        f"{prefix}/x_proj": ((d_in, r + 2 * n), ("mlp", None), "fan_in"),
+        f"{prefix}/dt_proj": ((r, d_in), (None, "mlp"), "fan_in"),
+        f"{prefix}/dt_bias": ((d_in,), ("mlp",), "dt_bias"),
+        f"{prefix}/a_log": ((d_in, n), ("mlp", None), "a_log"),
+        f"{prefix}/d_skip": ((d_in,), ("mlp",), "one"),
+        f"{prefix}/out_proj": ((d_in, d), ("mlp", "embed"), "fan_in"),
+    }
+
+
+def mamba_cache_shapes(cfg, batch):
+    d_in, n, k = cfg.mamba_d_inner, cfg.mamba_d_state, cfg.mamba_d_conv
+    return {"conv": ((batch, k - 1, d_in), cfg.dtype),
+            "ssm": ((batch, d_in, n), jnp.float32)}

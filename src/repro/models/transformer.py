@@ -1,0 +1,348 @@
+"""Unified model covering all 10 assigned architectures.
+
+One scan-over-layers decoder parameterized by ModelConfig:
+  * dense GQA transformers (gemma2 local/global + softcaps, qwen QKV-bias,
+    internlm2, granite)
+  * MoE (granite-moe, arctic dense-residual) via models.moe (EP shard_map)
+  * jamba hybrid (period-8 slot plan: 7x mamba + 1x attn, alternating MoE)
+  * xlstm (period-2: sLSTM / mLSTM, no FFN)
+  * whisper enc-dec (audio-frame stub frontend, cross-attention decoder)
+  * internvl VLM (patch-embedding stub frontend prepended to tokens)
+
+Layer stacks are stored as one param subtree per period-slot, stacked over
+periods, and executed with ``lax.scan`` (+ optional remat) so compile time
+and HLO size are depth-independent — required for the 80-cell dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ssm, xlstm
+from .attention import flash_attention
+from .layers import attention_layer, chunked_softmax_xent, dense, mlp_layer, rms_norm
+from .moe import moe_layer
+
+
+# ---------------------------------------------------------------------------
+# layer plan: (mixer, ffn) per period slot
+# ---------------------------------------------------------------------------
+
+def layer_plan(cfg, stack="dec"):
+    if stack == "enc":
+        return [("enc_attn", "dense")]
+    if cfg.layer_pattern == "xlstm":
+        return [("slstm", "none"), ("mlstm", "none")]
+    if cfg.layer_pattern == "jamba":
+        plan = []
+        for s in range(cfg.attn_every):
+            mixer = "attn" if s % cfg.attn_every == cfg.attn_offset else "mamba"
+            ffn = ("moe" if cfg.n_experts and s % cfg.moe_every == cfg.moe_offset
+                   else "dense")
+            plan.append((mixer, ffn))
+        return plan
+    if cfg.layer_pattern == "encdec":
+        return [("attn", "dense")]          # + cross-attn params added below
+    ffn = "dense"
+    if cfg.n_experts:
+        ffn = "moe+dense" if cfg.dense_residual else "moe"
+    return [("attn", ffn)]
+
+
+def n_periods(cfg, stack="dec"):
+    n_layers = cfg.n_enc_layers if stack == "enc" else cfg.n_layers
+    p = len(layer_plan(cfg, stack))
+    assert n_layers % p == 0, (cfg.name, stack, n_layers, p)
+    return n_layers // p
+
+
+# ---------------------------------------------------------------------------
+# parameter declarations:  path -> (shape, logical_axes, init_kind)
+# logical axes: "fsdp" -> data, "tp"/"experts"/"vocab" -> model, None -> repl
+# ---------------------------------------------------------------------------
+
+def _attn_defs(cfg, prefix, cross=False):
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    defs = {
+        f"{prefix}/wq": ((d, h * hd), ("fsdp", "tp"), "fan_in"),
+        f"{prefix}/wk": ((d, kv * hd), ("fsdp", "tp"), "fan_in"),
+        f"{prefix}/wv": ((d, kv * hd), ("fsdp", "tp"), "fan_in"),
+        f"{prefix}/wo": ((h * hd, d), ("tp", "fsdp"), "fan_out"),
+    }
+    if cfg.qkv_bias and not cross:
+        defs.update({
+            f"{prefix}/bq": ((h * hd,), ("tp",), "zero"),
+            f"{prefix}/bk": ((kv * hd,), ("tp",), "zero"),
+            f"{prefix}/bv": ((kv * hd,), ("tp",), "zero"),
+        })
+    return defs
+
+
+def _ffn_defs(cfg, prefix):
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        f"{prefix}/wg": ((d, f), ("fsdp", "tp"), "fan_in"),
+        f"{prefix}/wi": ((d, f), ("fsdp", "tp"), "fan_in"),
+        f"{prefix}/wo": ((f, d), ("tp", "fsdp"), "fan_out"),
+    }
+
+
+def _moe_defs(cfg, prefix):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts_padded
+    return {
+        f"{prefix}/router": ((d, e), (None, None), "fan_in"),
+        f"{prefix}/wg": ((e, d, f), ("experts", "fsdp", None), "fan_in"),
+        f"{prefix}/wi": ((e, d, f), ("experts", "fsdp", None), "fan_in"),
+        f"{prefix}/wo": ((e, f, d), ("experts", "fsdp", None), "fan_out"),
+    }
+
+
+def _slot_defs(cfg, slot_prefix, mixer, ffn, cross=False):
+    d = cfg.d_model
+    defs = {f"{slot_prefix}/norm1": ((d,), (None,), "zero")}
+    if mixer in ("attn", "enc_attn"):
+        defs.update(_attn_defs(cfg, f"{slot_prefix}/attn"))
+    elif mixer == "mamba":
+        defs.update(ssm.mamba_param_defs(cfg, f"{slot_prefix}/mamba"))
+    elif mixer in ("slstm", "mlstm"):
+        defs.update(xlstm.xlstm_param_defs(cfg, f"{slot_prefix}/{mixer}", mixer))
+    if cfg.post_norm:
+        defs[f"{slot_prefix}/norm1b"] = ((d,), (None,), "zero")
+    if cross:
+        defs[f"{slot_prefix}/normx"] = ((d,), (None,), "zero")
+        defs.update(_attn_defs(cfg, f"{slot_prefix}/xattn", cross=True))
+    if ffn != "none":
+        defs[f"{slot_prefix}/norm2"] = ((d,), (None,), "zero")
+        if cfg.post_norm:
+            defs[f"{slot_prefix}/norm2b"] = ((d,), (None,), "zero")
+    if ffn in ("dense", "moe+dense"):
+        defs.update(_ffn_defs(cfg, f"{slot_prefix}/mlp"))
+    if ffn in ("moe", "moe+dense"):
+        defs.update(_moe_defs(cfg, f"{slot_prefix}/moe"))
+    return defs
+
+
+def param_defs(cfg):
+    d, vp = cfg.d_model, cfg.vocab_padded
+    defs = {
+        "embed": ((vp, d), ("vocab", "fsdp"), "embed"),
+        "final_norm": ((d,), (None,), "zero"),
+    }
+    if not cfg.tie_embeddings:
+        defs["unembed"] = ((vp, d), ("vocab", "fsdp"), "fan_out")
+    for slot, (mixer, ffn) in enumerate(layer_plan(cfg, "dec")):
+        defs.update(_slot_defs(cfg, f"dec/s{slot}", mixer, ffn,
+                               cross=cfg.is_encdec))
+    if cfg.is_encdec:
+        defs["enc_final_norm"] = ((d,), (None,), "zero")
+        for slot, (mixer, ffn) in enumerate(layer_plan(cfg, "enc")):
+            defs.update(_slot_defs(cfg, f"enc/s{slot}", mixer, ffn))
+    return defs
+
+
+def _nest(flat: Dict[str, Any]) -> Dict[str, Any]:
+    tree: Dict[str, Any] = {}
+    for path, v in flat.items():
+        node = tree
+        parts = path.split("/")
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = v
+    return tree
+
+
+def _stack_shape(cfg, path, shape, stack_dim):
+    # stack layer-slot params over periods
+    if path.startswith(("dec/", "enc/")):
+        return (stack_dim,) + shape
+    return shape
+
+
+def init_params(cfg, rng):
+    defs = param_defs(cfg)
+    flat = {}
+    keys = jax.random.split(rng, len(defs))
+    for key, (path, (shape, _axes, kind)) in zip(keys, sorted(defs.items())):
+        stack = n_periods(cfg, "enc" if path.startswith("enc/") else "dec")
+        full = _stack_shape(cfg, path, shape, stack)
+        if kind == "zero":
+            v = jnp.zeros(full, jnp.float32)
+        elif kind == "one":
+            v = jnp.ones(full, jnp.float32)
+        elif kind == "embed":
+            v = jax.random.normal(key, full, jnp.float32)
+        elif kind == "dt_bias":
+            v = jnp.log(jnp.expm1(
+                jnp.exp(jax.random.uniform(key, full,
+                                           minval=math.log(1e-3),
+                                           maxval=math.log(1e-1)))))
+        elif kind == "a_log":
+            n = shape[-1]
+            v = jnp.broadcast_to(jnp.log(jnp.arange(1, n + 1, dtype=jnp.float32)),
+                                 full).copy()
+        elif kind == "f_bias":
+            v = jnp.ones(full, jnp.float32) * 3.0
+        elif kind == "orth":
+            v = 0.1 * jax.random.normal(key, full, jnp.float32)
+        elif kind == "fan_out":
+            fan = shape[-2] if len(shape) >= 2 else shape[-1]
+            v = jax.random.normal(key, full, jnp.float32) / math.sqrt(fan)
+        else:  # fan_in
+            fan = shape[-2] if len(shape) >= 2 else shape[-1]
+            v = jax.random.normal(key, full, jnp.float32) / math.sqrt(fan)
+        flat[path] = v
+    return _nest(flat)
+
+
+def param_axes(cfg):
+    defs = param_defs(cfg)
+    flat = {}
+    for path, (shape, axes, _k) in defs.items():
+        if path.startswith(("dec/", "enc/")):
+            axes = (None,) + tuple(axes)
+        flat[path] = tuple(axes)
+    return _nest(flat)
+
+
+def param_shapes(cfg):
+    defs = param_defs(cfg)
+    flat = {}
+    for path, (shape, _a, _k) in defs.items():
+        stack = n_periods(cfg, "enc" if path.startswith("enc/") else "dec")
+        flat[path] = jax.ShapeDtypeStruct(_stack_shape(cfg, path, shape, stack),
+                                          jnp.float32)
+    return _nest(flat)
+
+
+# ---------------------------------------------------------------------------
+# forward blocks
+# ---------------------------------------------------------------------------
+
+def _shard(x, spec, parallel):
+    if parallel is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(parallel.mesh, spec))
+
+
+def _block(x, lp, cfg, mixer, ffn, *, window, positions, cur_pos, cache,
+           enc_out, parallel, cross, decode_positions=None):
+    """One (mixer + ffn) residual block. Returns (x, new_cache, aux)."""
+    aux = jnp.float32(0.0)
+    h = rms_norm(x, lp["norm1"], cfg.norm_eps)
+    if mixer in ("attn", "enc_attn"):
+        y, new_mix_cache = attention_layer(
+            lp["attn"], h, cfg, positions, window=window,
+            cache=None if cache is None else cache.get("attn"),
+            cur_pos=cur_pos, causal=(mixer == "attn"),
+            decode_positions=decode_positions, parallel=parallel)
+    elif mixer == "mamba":
+        y, new_mix_cache = ssm.mamba_layer(
+            lp["mamba"], h, cfg, None if cache is None else cache.get("mamba"),
+            parallel=parallel)
+    elif mixer == "slstm":
+        y, new_mix_cache = xlstm.slstm_layer(
+            lp["slstm"], h, cfg, None if cache is None else cache.get("slstm"))
+    else:
+        y, new_mix_cache = xlstm.mlstm_layer(
+            lp["mlstm"], h, cfg, None if cache is None else cache.get("mlstm"))
+    if cfg.post_norm:
+        y = rms_norm(y, lp["norm1b"], cfg.norm_eps)
+    x = x + y
+    new_cache = {"attn" if mixer in ("attn", "enc_attn") else mixer:
+                 new_mix_cache}
+
+    if cross:
+        h = rms_norm(x, lp["normx"], cfg.norm_eps)
+        y, xc = attention_layer(
+            lp["xattn"], h, cfg, positions,
+            cache=None if cache is None else cache.get("xattn"),
+            cur_pos=cur_pos, xattn_kv=enc_out, causal=False,
+            cross=cache is not None, parallel=parallel)
+        x = x + y
+        new_cache["xattn"] = xc
+
+    if ffn != "none":
+        h = rms_norm(x, lp["norm2"], cfg.norm_eps)
+        y = jnp.zeros_like(x)
+        if ffn in ("dense", "moe+dense"):
+            y = y + mlp_layer(lp["mlp"], h)
+        if ffn in ("moe", "moe+dense"):
+            ym, aux = moe_layer(lp["moe"], h, cfg, parallel)
+            y = y + ym
+        if cfg.post_norm:
+            y = rms_norm(y, lp["norm2b"], cfg.norm_eps)
+        x = x + y
+    if parallel is not None:
+        # sequence parallelism on the residual stream: the layer-boundary
+        # activations the remat'd scan stores shrink by the tp size
+        # (Megatron-SP; the resolver drops `sp` when S % tp != 0, e.g. decode)
+        from ..parallel.sharding import resolve_spec
+        spec = resolve_spec(("batch", "sp", None), x.shape, parallel)
+        x = _shard(x, spec, parallel)
+    return x, new_cache, aux
+
+
+def _window_array(cfg, stack="dec"):
+    """Per-slot per-period sliding-window sizes (gemma2 local/global)."""
+    plan = layer_plan(cfg, stack)
+    np_ = n_periods(cfg, stack)
+    p = len(plan)
+    wins = np.zeros((np_, p), np.int32)
+    if cfg.sliding_window and cfg.local_every:
+        for layer in range(np_ * p):
+            if layer % cfg.local_every == 0:
+                wins[layer // p, layer % p] = cfg.sliding_window
+    return jnp.asarray(wins)
+
+
+def forward_stack(params_stack, x, cfg, *, stack="dec", positions,
+                  parallel=None, cache=None, cur_pos=None, enc_out=None,
+                  collect_cache=False, decode_positions=None):
+    """Scan the layer stack. Returns (x, new_cache_stacked, aux_sum)."""
+    plan = layer_plan(cfg, stack)
+    cross = cfg.is_encdec and stack == "dec"
+    wins = _window_array(cfg, stack)
+
+    def period_fn(carry, xs):
+        x = carry
+        lps, win_row, cache_row = xs
+        new_caches = {}
+        aux_tot = jnp.float32(0.0)
+        for slot, (mixer, ffn) in enumerate(plan):
+            sl_cache = None if cache_row is None else cache_row.get(f"s{slot}")
+
+            def block_fn(x_, lp_, win_, cache_, mixer=mixer, ffn=ffn):
+                return _block(
+                    x_, lp_, cfg, mixer, ffn, window=win_,
+                    positions=positions, cur_pos=cur_pos, cache=cache_,
+                    enc_out=enc_out, parallel=parallel, cross=cross,
+                    decode_positions=decode_positions)
+
+            if cfg.remat and len(plan) > 1:
+                # nested remat: the period backward replays one block at a
+                # time instead of holding all slots' internals live
+                block_fn = jax.checkpoint(
+                    block_fn, policy=jax.checkpoint_policies.nothing_saveable,
+                    prevent_cse=False)
+            x, nc, aux = block_fn(x, lps[f"s{slot}"], win_row[slot], sl_cache)
+            aux_tot = aux_tot + aux
+            if collect_cache or cache_row is not None:
+                new_caches[f"s{slot}"] = nc
+        return x, (new_caches, aux_tot)
+
+    body = period_fn
+    if cfg.remat:
+        body = jax.checkpoint(
+            period_fn, policy=jax.checkpoint_policies.nothing_saveable,
+            prevent_cse=False)
+
+    xs = (params_stack, wins, cache)
+    x, (new_cache, auxs) = jax.lax.scan(body, x, xs)
+    return x, new_cache, jnp.sum(auxs)

@@ -1,0 +1,160 @@
+"""xLSTM blocks (sLSTM + mLSTM, Beck et al. 2024) for the xlstm-125m arch.
+
+Both are implemented as their exact stabilized recurrences via ``lax.scan``
+over time (one HLO body regardless of sequence length; the chunked-parallel
+mLSTM form is a recorded perf-iteration item). States are small —
+long_500k decode carries only O(H*dh^2) per layer, no KV cache.
+
+Stack layout: alternating sLSTM / mLSTM (period 2), no FFN (d_ff = 0): each
+block has its own up/down projections per the xLSTM paper.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense, rms_norm
+
+
+def _chunked_time_scan(step, state, xs, chunk=256):
+    """scan-of-checkpointed-chunk-scans over the leading (time) axis.
+
+    A flat S-step scan saves per-step residuals (for mLSTM that's the
+    (B,H,dh,dh) matrix memory — 4096 x 9.4 MB = 38 GB/dev at train_4k);
+    chunking + remat bounds saved state to per-chunk carries.
+    """
+    s = xs[0].shape[0]
+    ck = min(chunk, s)
+    while s % ck:
+        ck -= 1
+    if ck == s:
+        return jax.lax.scan(step, state, xs)
+    nc = s // ck
+
+    @jax.checkpoint
+    def chunk_body(st, xs_chunk):
+        return jax.lax.scan(step, st, xs_chunk)
+
+    xs_r = tuple(x.reshape(nc, ck, *x.shape[1:]) for x in xs)
+    state, ys = jax.lax.scan(chunk_body, state, xs_r)
+    ys = jax.tree_util.tree_map(
+        lambda y: y.reshape(s, *y.shape[2:]), ys)
+    return state, ys
+
+
+# ---------------------------------------------------------------------------
+# mLSTM: matrix memory C (B,H,dh,dh) with exponential gating
+# ---------------------------------------------------------------------------
+
+def _mlstm_step(state, inp):
+    c, nrm, m = state                       # (B,H,d,d), (B,H,d), (B,H)
+    q, k, v, logf, logi = inp               # (B,H,d) x3, (B,H), (B,H)
+    m_new = jnp.maximum(logf + m, logi)
+    f = jnp.exp(logf + m - m_new)[..., None]
+    i = jnp.exp(logi - m_new)[..., None]
+    c = f[..., None] * c + i[..., None] * (v[..., :, None] * k[..., None, :])
+    nrm = f * nrm + i * k
+    h_num = jnp.einsum("bhvk,bhk->bhv", c, q)
+    h_den = jnp.abs(jnp.einsum("bhk,bhk->bh", nrm, q))
+    h = h_num / jnp.maximum(h_den, jnp.exp(-m_new))[..., None]
+    return (c, nrm, m_new), h
+
+
+def mlstm_layer(p, x, cfg, cache=None):
+    b, s, d = x.shape
+    h_, dh = cfg.n_heads, cfg.head_dim
+    q = dense(x, p["wq"]).reshape(b, s, h_, dh)
+    k = dense(x, p["wk"]).reshape(b, s, h_, dh) * (dh ** -0.5)
+    v = dense(x, p["wv"]).reshape(b, s, h_, dh)
+    gates = dense(x, p["w_gates"]).astype(jnp.float32)   # (B,S,2H)
+    logf = jax.nn.log_sigmoid(gates[..., :h_] + p["f_bias"].astype(jnp.float32))
+    logi = gates[..., h_:]
+    o = jax.nn.sigmoid(dense(x, p["w_o_gate"]).astype(jnp.float32))
+
+    if cache is None:
+        c0 = jnp.zeros((b, h_, dh, dh), jnp.float32)
+        n0 = jnp.zeros((b, h_, dh), jnp.float32)
+        m0 = jnp.full((b, h_), -1e30, jnp.float32)
+    else:
+        c0, n0, m0 = cache["c"], cache["n"], cache["m"]
+
+    xs = (jnp.moveaxis(q, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(k, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(v, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(logf, 1, 0), jnp.moveaxis(logi, 1, 0))
+    (c, n, m), hs = _chunked_time_scan(_mlstm_step, (c0, n0, m0), xs)
+    hs = jnp.moveaxis(hs, 0, 1)                          # (B,S,H,dh)
+    out = (hs.reshape(b, s, h_ * dh) * o).astype(x.dtype)
+    return dense(out, p["w_out"]), {"c": c, "n": n, "m": m}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM: scalar memory with block-diagonal (per-head) recurrence
+# ---------------------------------------------------------------------------
+
+def _slstm_step(rw, state, inp):
+    c, n, m, h_prev = state                 # (B,H,d) x3 + (B,H,d)
+    zx, ix, fx, ox = inp                    # each (B,H,d)
+    rec = jnp.einsum("bhd,hde->bhe", h_prev, rw)
+    z = jnp.tanh(zx + rec)
+    logi = ix + rec
+    logf = jax.nn.log_sigmoid(fx + rec)
+    m_new = jnp.maximum(logf + m, logi)
+    i = jnp.exp(logi - m_new)
+    f = jnp.exp(logf + m - m_new)
+    c = f * c + i * z
+    n = f * n + i
+    h = jax.nn.sigmoid(ox) * c / jnp.maximum(n, 1e-6)
+    return (c, n, m_new, h), h
+
+
+def slstm_layer(p, x, cfg, cache=None):
+    b, s, d = x.shape
+    h_, dh = cfg.n_heads, cfg.head_dim
+    pre = dense(x, p["w_in"]).astype(jnp.float32)        # (B,S,4*H*dh)
+    zx, ix, fx, ox = [t.reshape(b, s, h_, dh)
+                      for t in jnp.split(pre, 4, axis=-1)]
+    if cache is None:
+        zeros = jnp.zeros((b, h_, dh), jnp.float32)
+        state = (zeros, zeros, jnp.full((b, h_, dh), -1e30, jnp.float32), zeros)
+    else:
+        state = (cache["c"], cache["n"], cache["m"], cache["h"])
+    rw = p["w_rec"].astype(jnp.float32)                  # (H, dh, dh)
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (zx, ix, fx, ox))
+    step = lambda st, inp: _slstm_step(rw, st, inp)
+    state, hs = _chunked_time_scan(step, state, xs)
+    hs = jnp.moveaxis(hs, 0, 1).reshape(b, s, h_ * dh).astype(x.dtype)
+    out = dense(hs, p["w_out"])
+    return out, {"c": state[0], "n": state[1], "m": state[2], "h": state[3]}
+
+
+def xlstm_param_defs(cfg, prefix, kind):
+    d, h_, dh = cfg.d_model, cfg.n_heads, cfg.head_dim
+    hd = h_ * dh
+    if kind == "mlstm":
+        return {
+            f"{prefix}/wq": ((d, hd), ("embed", "heads"), "fan_in"),
+            f"{prefix}/wk": ((d, hd), ("embed", "heads"), "fan_in"),
+            f"{prefix}/wv": ((d, hd), ("embed", "heads"), "fan_in"),
+            f"{prefix}/w_gates": ((d, 2 * h_), ("embed", None), "fan_in"),
+            f"{prefix}/f_bias": ((h_,), (None,), "f_bias"),
+            f"{prefix}/w_o_gate": ((d, hd), ("embed", "heads"), "fan_in"),
+            f"{prefix}/w_out": ((hd, d), ("heads", "embed"), "fan_in"),
+        }
+    return {
+        f"{prefix}/w_in": ((d, 4 * hd), ("embed", "heads"), "fan_in"),
+        f"{prefix}/w_rec": ((h_, dh, dh), (None, None, None), "orth"),
+        f"{prefix}/w_out": ((hd, d), ("heads", "embed"), "fan_in"),
+    }
+
+
+def xlstm_cache_shapes(cfg, batch, kind):
+    h_, dh = cfg.n_heads, cfg.head_dim
+    if kind == "mlstm":
+        return {"c": ((batch, h_, dh, dh), jnp.float32),
+                "n": ((batch, h_, dh), jnp.float32),
+                "m": ((batch, h_), jnp.float32)}
+    return {"c": ((batch, h_, dh), jnp.float32),
+            "n": ((batch, h_, dh), jnp.float32),
+            "m": ((batch, h_, dh), jnp.float32),
+            "h": ((batch, h_, dh), jnp.float32)}

@@ -1,0 +1,2 @@
+from .sharding import (ParallelContext, constraint, from_mesh, resolve_spec,
+                       tree_shardings)

@@ -1,0 +1,80 @@
+"""Batched serving engine: prefill -> ring-buffer decode, quantized weights.
+
+The engine demonstrates the paper's deployment story end-to-end: params may
+be a mixed pytree with MSB ``QTensor`` leaves (quantize-on-load via
+core.policy); the model dequantizes per layer (simulation mode, paper Sec.
+4.1) or routes through the Pallas fused kernel on TPU.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class ServeEngine:
+    model: object
+    params: object
+    max_seq: int
+    parallel: object = None
+
+    def __post_init__(self):
+        self._prefill = jax.jit(
+            lambda p, b: self.model.prefill(p, b, self.parallel))
+        self._decode = jax.jit(
+            lambda p, c, t, pos: self.model.decode_step(p, c, t, pos,
+                                                        self.parallel))
+
+    def _grow_cache(self, cache, prompt_len):
+        """Re-home prefill caches (length P) into max_seq ring buffers."""
+        s = self.max_seq
+
+        def grow(leaf):
+            if (hasattr(leaf, "ndim") and leaf.ndim >= 3
+                    and leaf.shape[2] == prompt_len):   # (P?, B, S, ...) k/v
+                pad = [(0, 0)] * leaf.ndim
+                pad[2] = (0, s - prompt_len)
+                return jnp.pad(leaf, pad)
+            return leaf
+
+        new = {"layers": jax.tree_util.tree_map(grow, cache["layers"])}
+        if "pos" in cache:
+            pos = jnp.full((cache["pos"].shape[0], s), -1, jnp.int32)
+            new["pos"] = jax.lax.dynamic_update_slice_in_dim(
+                pos, cache["pos"], 0, 1)
+        return new
+
+    def generate(self, prompts, n_tokens, temperature=0.0, rng=None):
+        """prompts: (B, P) int32. Returns (B, n_tokens) greedy/temp samples."""
+        prompts = jnp.asarray(prompts, jnp.int32)
+        b, p = prompts.shape
+        assert p + n_tokens <= self.max_seq
+        logits, cache = self._prefill(self.params, {"tokens": prompts})
+        cache = self._grow_cache(cache, p)
+        out = []
+        cur = jnp.full((b,), p, jnp.int32)
+        rng = rng if rng is not None else jax.random.PRNGKey(0)
+        for i in range(n_tokens):
+            if temperature > 0:
+                rng, sub = jax.random.split(rng)
+                tok = jax.random.categorical(sub, logits / temperature, axis=-1)
+            else:
+                tok = jnp.argmax(logits, axis=-1)
+            out.append(tok)
+            logits, cache = self._decode(self.params, cache,
+                                         tok[:, None].astype(jnp.int32), cur)
+            cur = cur + 1
+        return jnp.stack(out, axis=1)
+
+    def score(self, tokens):
+        """Mean next-token NLL of ``tokens`` (B, S) under the model."""
+        batch = {"tokens": tokens[:, :-1],
+                 "labels": tokens[:, 1:].astype(jnp.int32)}
+        loss, _ = jax.jit(
+            lambda p, b: self.model.loss(p, b, self.parallel))(
+                self.params, batch)
+        return float(loss)

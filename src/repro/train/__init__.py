@@ -1,0 +1,5 @@
+from .optim import AdamW, OptConfig, clip_by_global_norm, global_norm, lr_schedule
+from .train_loop import init_state, make_train_step, state_axes, train_loop
+from .checkpoint import Checkpointer
+from .fault import PreemptionHandler, StragglerMonitor
+from . import compression

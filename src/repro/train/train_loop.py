@@ -1,0 +1,86 @@
+"""Training step + loop with fault tolerance hooks."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .optim import AdamW, OptConfig, clip_by_global_norm, lr_schedule
+
+
+def make_train_step(model, opt: AdamW, parallel=None):
+    """Pure (state, batch) -> (state, metrics). state = {params, opt}."""
+
+    def train_step(state, batch):
+        def loss_fn(p):
+            return model.loss(p, batch, parallel)
+
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(state["params"])
+        grads, gnorm = clip_by_global_norm(grads, opt.cfg.grad_clip)
+        params, opt_state = opt.update(grads, state["opt"], state["params"])
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm,
+                       lr=lr_schedule(opt.cfg, opt_state["step"]))
+        return {"params": params, "opt": opt_state}, metrics
+
+    return train_step
+
+
+def init_state(model, opt: AdamW, rng, param_dtype=jnp.float32):
+    params = model.init(rng)
+    params = jax.tree_util.tree_map(lambda p: p.astype(param_dtype), params)
+    return {"params": params, "opt": opt.init(params)}
+
+
+def state_axes(model, opt: AdamW):
+    """Logical axes for the whole train state (sharding resolver input)."""
+    pax = model.param_axes()
+    pshapes = model.param_shapes()
+    return {"params": pax, "opt": opt.moment_axes(pax, pshapes)}
+
+
+def train_loop(model, opt, data_iter, *, steps, state=None, rng=None,
+               parallel=None, checkpointer=None, checkpoint_every=0,
+               log_every=10, straggler_monitor=None, should_stop=None,
+               log_fn=print):
+    """Run the training loop with checkpoint/restart + preemption handling.
+
+    - resumes from ``checkpointer.latest()`` if available
+    - saves every ``checkpoint_every`` steps and on preemption signal
+    - ``straggler_monitor`` records per-step wall times
+    """
+    step_fn = jax.jit(make_train_step(model, opt, parallel), donate_argnums=0)
+    start_step = 0
+    if state is None:
+        state = init_state(model, opt, rng)
+    if checkpointer is not None:
+        host_like = jax.tree_util.tree_map(
+            lambda x: jax.numpy.asarray(x), state)
+        restored = checkpointer.restore_latest(like=host_like)
+        if restored is not None:
+            tree, start_step = restored
+            state = jax.tree_util.tree_map(jnp.asarray, tree)
+            log_fn(f"[train] resumed from step {start_step}")
+
+    metrics = {}
+    for step in range(start_step, steps):
+        t0 = time.perf_counter()
+        batch = next(data_iter)
+        state, metrics = step_fn(state, batch)
+        if straggler_monitor is not None:
+            jax.block_until_ready(metrics["loss"])
+            straggler_monitor.record(step, time.perf_counter() - t0)
+        if log_every and (step % log_every == 0 or step == steps - 1):
+            log_fn(f"[train] step {step} loss {float(metrics['loss']):.4f} "
+                   f"gnorm {float(metrics['grad_norm']):.3f}")
+        preempted = should_stop is not None and should_stop()
+        if checkpointer is not None and (
+                preempted or (checkpoint_every
+                              and (step + 1) % checkpoint_every == 0)):
+            checkpointer.save(state, step + 1)
+        if preempted:
+            log_fn(f"[train] preemption: checkpointed at step {step + 1}")
+            break
+    return state, metrics

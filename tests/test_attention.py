@@ -1,0 +1,95 @@
+"""Chunked flash attention vs naive softmax attention (fwd + grad + decode)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.models.attention import decode_attention, flash_attention
+
+
+def naive(q, k, v, causal=True, window=0, softcap=0.0):
+    b, sq, h, d = q.shape
+    kv = k.shape[2]
+    rep = h // kv
+    qh = q.reshape(b, sq, kv, rep, d).astype(jnp.float32)
+    s = jnp.einsum("bqkrd,bskd->bqkrs", qh, k.astype(jnp.float32)) / d ** 0.5
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos, kpos = jnp.arange(sq), jnp.arange(k.shape[1])
+    m = jnp.ones((sq, k.shape[1]), bool)
+    if causal:
+        m &= kpos[None] <= qpos[:, None]
+    if window > 0:
+        m &= kpos[None] > qpos[:, None] - window
+    s = jnp.where(m[None, :, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqkrs,bskd->bqkrd", p,
+                      v.astype(jnp.float32)).reshape(b, sq, h, d)
+
+
+@pytest.fixture
+def qkv(rng):
+    B, S, H, KV, D = 2, 129, 8, 4, 16
+    return (jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32),
+            jnp.asarray(rng.standard_normal((B, S, KV, D)), jnp.float32),
+            jnp.asarray(rng.standard_normal((B, S, KV, D)), jnp.float32))
+
+
+@pytest.mark.parametrize("causal,window,cap", [
+    (True, 0, 0.0), (True, 32, 0.0), (True, 0, 30.0), (False, 0, 0.0),
+    (True, 32, 50.0)])
+def test_forward(qkv, causal, window, cap):
+    q, k, v = qkv
+    o1 = flash_attention(q, k, v, causal=causal, window=window, softcap=cap,
+                         chunk_q=32, chunk_kv=32)
+    o2 = naive(q, k, v, causal=causal, window=window, softcap=cap)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               atol=2e-5, rtol=1e-4)
+
+
+def test_gradients(qkv):
+    q, k, v = qkv
+
+    def loss_flash(q, k, v):
+        return jnp.sum(flash_attention(q, k, v, causal=True, window=32,
+                                       softcap=30.0, chunk_q=32,
+                                       chunk_kv=32) ** 2)
+
+    def loss_ref(q, k, v):
+        return jnp.sum(naive(q, k, v, causal=True, window=32,
+                             softcap=30.0) ** 2)
+
+    g1 = jax.grad(loss_flash, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=5e-4, rtol=1e-3)
+
+
+def test_decode_matches_full(rng):
+    B, S, KV, H, D = 2, 64, 2, 4, 16
+    q = jnp.asarray(rng.standard_normal((B, 1, H, D)), jnp.float32)
+    kc = jnp.asarray(rng.standard_normal((B, S, KV, D)), jnp.float32)
+    vc = jnp.asarray(rng.standard_normal((B, S, KV, D)), jnp.float32)
+    valid = 40
+    pos = jnp.where(jnp.arange(S)[None] < valid, jnp.arange(S)[None], -1)
+    pos = jnp.tile(pos, (B, 1)).astype(jnp.int32)
+    out = decode_attention(q, kc, vc, pos, jnp.full((B,), valid - 1,
+                                                    jnp.int32), chunk_kv=16)
+    ref = naive(q, kc[:, :valid], vc[:, :valid], causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=1e-4)
+
+
+def test_decode_sliding_window(rng):
+    B, S, KV, H, D = 1, 64, 2, 2, 16
+    q = jnp.asarray(rng.standard_normal((B, 1, H, D)), jnp.float32)
+    kc = jnp.asarray(rng.standard_normal((B, S, KV, D)), jnp.float32)
+    vc = jnp.asarray(rng.standard_normal((B, S, KV, D)), jnp.float32)
+    pos = jnp.tile(jnp.arange(S)[None], (B, 1)).astype(jnp.int32)
+    cur = jnp.full((B,), S - 1, jnp.int32)
+    win = 16
+    out = decode_attention(q, kc, vc, pos, cur, window=win, chunk_kv=16)
+    ref = naive(q, kc[:, S - win:], vc[:, S - win:], causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=1e-4)

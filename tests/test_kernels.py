@@ -1,0 +1,115 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import quantize_blockwise, dequantize
+from repro.kernels.msb_matmul.msb_matmul import msb_matmul
+from repro.kernels.msb_matmul.ops import qtensor_matmul, to_kernel_layout
+from repro.kernels.msb_matmul.ref import dequant_ref, msb_matmul_ref
+from repro.kernels.flash_attention.flash_attention import flash_attention_fwd
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+# ---------------------------------------------------------------------------
+# msb_matmul
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,k,n", [(8, 64, 128), (16, 128, 128),
+                                   (8, 256, 384), (32, 128, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_msb_matmul_sweep(rng, m, k, n, dtype):
+    w = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+    q = quantize_blockwise(w, bits=4, block=64, solver="dp")
+    packed, scales = to_kernel_layout(q)
+    x = jnp.asarray(rng.standard_normal((m, k)), dtype)
+    y_kernel = msb_matmul(x, packed, scales, bm=8, bn=128, bk=64,
+                          interpret=True)
+    y_ref = msb_matmul_ref(x, packed, scales)
+    atol = 5e-2 if dtype == jnp.bfloat16 else 5e-4
+    np.testing.assert_allclose(np.asarray(y_kernel, np.float32),
+                               np.asarray(y_ref, np.float32),
+                               atol=atol, rtol=1e-2)
+
+
+def test_kernel_layout_matches_qtensor_dequant(rng):
+    """packed/scales layout dequantizes to exactly QTensor.dequantize()
+    (up to the packed-zero caveat)."""
+    w = jnp.asarray(rng.standard_normal((128, 256)), jnp.float32)
+    q = quantize_blockwise(w, bits=4, block=64, solver="dp")
+    packed, scales = to_kernel_layout(q)
+    np.testing.assert_allclose(np.asarray(dequant_ref(packed, scales)),
+                               np.asarray(dequantize(q)), atol=1e-6)
+
+
+def test_qtensor_matmul_wrapper(rng):
+    w = jnp.asarray(rng.standard_normal((128, 128)), jnp.float32)
+    q = quantize_blockwise(w, bits=4, block=64, solver="dp")
+    x = jnp.asarray(rng.standard_normal((4, 128)), jnp.float32)
+    y_ref = x @ dequantize(q)
+    y_jnp = qtensor_matmul(x, q, use_kernel=False)
+    y_krn = qtensor_matmul(x, q, use_kernel=True, interpret=True)
+    np.testing.assert_allclose(np.asarray(y_jnp), np.asarray(y_ref),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(y_krn), np.asarray(y_ref),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_msb_matmul_block_shape_invariance(rng):
+    """Different VMEM tilings give identical results."""
+    k, n = 128, 256
+    w = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+    q = quantize_blockwise(w, bits=4, block=64, solver="dp")
+    packed, scales = to_kernel_layout(q)
+    x = jnp.asarray(rng.standard_normal((16, k)), jnp.float32)
+    outs = [np.asarray(msb_matmul(x, packed, scales, bm=bm, bn=bn, bk=bk,
+                                  interpret=True))
+            for bm, bn, bk in [(16, 256, 128), (8, 128, 64), (16, 64, 32)]]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("s,h,kv,d", [(128, 4, 2, 32), (256, 8, 8, 16),
+                                      (64, 2, 1, 64)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_kernel_sweep(rng, s, h, kv, d, causal):
+    B = 2
+    q = jnp.asarray(rng.standard_normal((B, h, s, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, kv, s, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, kv, s, d)), jnp.float32)
+    o_k = flash_attention_fwd(q, k, v, causal=causal, bq=64, bkv=64,
+                              interpret=True)
+    o_r = flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r),
+                               atol=2e-5, rtol=1e-4)
+
+
+@pytest.mark.parametrize("window,cap", [(32, 0.0), (0, 30.0), (64, 50.0)])
+def test_flash_kernel_window_softcap(rng, window, cap):
+    B, H, KV, S, D = 1, 4, 2, 128, 32
+    q = jnp.asarray(rng.standard_normal((B, H, S, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, KV, S, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, KV, S, D)), jnp.float32)
+    o_k = flash_attention_fwd(q, k, v, causal=True, window=window,
+                              softcap=cap, bq=32, bkv=32, interpret=True)
+    o_r = flash_attention_ref(q, k, v, causal=True, window=window,
+                              softcap=cap)
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r),
+                               atol=2e-5, rtol=1e-4)
+
+
+def test_flash_kernel_bf16(rng):
+    B, H, KV, S, D = 1, 2, 2, 128, 32
+    q = jnp.asarray(rng.standard_normal((B, H, S, D)), jnp.bfloat16)
+    k = jnp.asarray(rng.standard_normal((B, KV, S, D)), jnp.bfloat16)
+    v = jnp.asarray(rng.standard_normal((B, KV, S, D)), jnp.bfloat16)
+    o_k = flash_attention_fwd(q, k, v, causal=True, bq=64, bkv=64,
+                              interpret=True)
+    o_r = flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(o_k, np.float32),
+                               np.asarray(o_r, np.float32), atol=3e-2)

@@ -1,0 +1,66 @@
+"""MSB objective identities (paper Sec. 3.2 / Appendix A)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import assume, given, settings, strategies as st
+
+from repro.core import (grouping_cost, group_sse, lambda_bounds,
+                        lambda_from_tilde, prefix_sums, xnor_closed_form)
+
+
+def _arrays(min_size=2, max_size=64):
+    # zero-free by construction (Eq. 1 assumes B in {-1,+1}: exact zeros
+    # live in the paper's zero-loss special group)
+    return st.lists(
+        st.floats(0.0078125, 10, allow_nan=False, width=32).flatmap(
+            lambda m: st.sampled_from([m, -m])),
+        min_size=min_size, max_size=max_size).map(np.asarray)
+
+
+@given(_arrays())
+@settings(max_examples=50, deadline=None)
+def test_xnor_closed_form_is_optimal(a):
+    """alpha* = mean|A| minimizes ||A - alpha sign(A)||^2 over alpha."""
+    alpha, b = xnor_closed_form(a)
+    base = float(jnp.sum((jnp.asarray(a) - alpha * b) ** 2))
+    for da in (-0.05, 0.05, 0.3):
+        perturbed = float(jnp.sum((jnp.asarray(a) - (alpha + da) * b) ** 2))
+        assert perturbed >= base - 1e-5
+
+
+@given(_arrays())
+@settings(max_examples=50, deadline=None)
+def test_variance_identity(a):
+    """||A - alpha* B*||^2 == |A| * Var(|A|) (Appendix A, zero-free)."""
+    alpha, b = xnor_closed_form(a)
+    sse = float(jnp.sum((jnp.asarray(a) - alpha * b) ** 2))
+    mags = np.abs(a)
+    assert sse == pytest.approx(a.size * mags.var(), rel=1e-4, abs=1e-5)
+    assert float(group_sse(a)) == pytest.approx(sse, rel=1e-4, abs=1e-5)
+
+
+def test_prefix_sums():
+    v = jnp.asarray([1.0, 2.0, 3.0])
+    s1, s2 = prefix_sums(v)
+    np.testing.assert_allclose(s1, [0, 1, 3, 6])
+    np.testing.assert_allclose(s2, [0, 1, 5, 14])
+
+
+def test_grouping_cost_single_group_equals_sse(rng):
+    a = rng.standard_normal(32)
+    c = float(grouping_cost(a, [0, 32]))
+    assert c == pytest.approx(float(group_sse(a)), rel=1e-5)
+
+
+def test_grouping_cost_singletons_is_zero(rng):
+    a = rng.standard_normal(8)
+    c = float(grouping_cost(a, list(range(9))))
+    assert c == pytest.approx(0.0, abs=1e-6)
+
+
+def test_lambda_bounds_order(rng):
+    a = rng.standard_normal(256)
+    lo, hi = lambda_bounds(a)
+    assert 0 <= lo < hi
+    assert lambda_from_tilde(a, 0.0) == pytest.approx(lo)
+    assert lambda_from_tilde(a, 1.0) == pytest.approx(hi)

@@ -1,0 +1,111 @@
+"""Quantize/dequantize API, packing, policies, storage accounting."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (QTensor, QuantPolicy, dequantize, dequantize_params,
+                        double_quantize, pack_codes_int4, param_bits,
+                        quantize_blockwise, quantize_params,
+                        quantize_pertensor, reconstruction_mse,
+                        storage_bits_per_weight, unpack_codes_int4, baselines)
+
+
+def test_blockwise_roundtrip_mse_beats_rtn(rng):
+    w = rng.standard_normal((16, 128)).astype(np.float32)
+    q = quantize_blockwise(w, bits=4, block=64, solver="dp")
+    mse_msb = float(reconstruction_mse(w, dequantize(q)))
+    mse_rtn = float(reconstruction_mse(w, baselines.rtn_quantize(w, 4, 64)))
+    assert mse_msb < mse_rtn
+
+
+def test_pertensor_kmeans_beats_rtn(rng):
+    w = rng.standard_normal((32, 64)).astype(np.float32)
+    q = quantize_pertensor(w, bits=6, solver="kmeans")
+    mse_msb = float(reconstruction_mse(w, dequantize(q)))
+    mse_rtn = float(reconstruction_mse(w, baselines.rtn_quantize(w, 6, -1)))
+    assert mse_msb < mse_rtn
+
+
+@given(st.integers(2, 4))
+@settings(max_examples=10, deadline=None)
+def test_bits_monotonic(bits):
+    rng = np.random.default_rng(1)
+    w = rng.standard_normal((8, 128)).astype(np.float32)
+    lo = quantize_blockwise(w, bits=bits, block=64, solver="dp")
+    hi = quantize_blockwise(w, bits=bits + 1, block=64, solver="dp")
+    assert float(reconstruction_mse(w, dequantize(hi))) <= \
+        float(reconstruction_mse(w, dequantize(lo))) + 1e-5
+
+
+def test_codes_range(rng):
+    w = rng.standard_normal((8, 128)).astype(np.float32)
+    q = quantize_blockwise(w, bits=4, block=64, solver="dp")
+    codes = np.asarray(q.codes)
+    assert codes.min() >= -8 and codes.max() <= 8
+    # sign structure: dequant sign matches weight sign
+    wd = np.asarray(dequantize(q))
+    nz = w != 0
+    assert (np.sign(wd[nz]) == np.sign(w[nz])).all()
+
+
+def test_int4_packing_roundtrip(rng):
+    w = rng.standard_normal((8, 128)).astype(np.float32)
+    q = quantize_blockwise(w, bits=4, block=64, solver="dp")
+    packed = pack_codes_int4(q.codes)
+    assert packed.size == q.codes.size // 2
+    codes2 = unpack_codes_int4(packed, q.codes.shape)
+    nz = np.asarray(q.codes) != 0
+    np.testing.assert_array_equal(np.asarray(codes2)[nz],
+                                  np.asarray(q.codes)[nz])
+
+
+def test_storage_accounting(rng):
+    w = rng.standard_normal((64, 64)).astype(np.float32)
+    q = quantize_blockwise(w, bits=4, block=64, solver="dp")
+    assert storage_bits_per_weight(q) == pytest.approx(6.00, abs=0.01)
+    assert storage_bits_per_weight(q, double_quant=True) == \
+        pytest.approx(4.78, abs=0.01)
+
+
+def test_double_quantize_small_degradation(rng):
+    w = rng.standard_normal((64, 512)).astype(np.float32)
+    q = quantize_blockwise(w, bits=4, block=64, solver="dp")
+    qd = double_quantize(q, bits=6, block=512)
+    m1 = float(reconstruction_mse(w, dequantize(q)))
+    m2 = float(reconstruction_mse(w, dequantize(qd)))
+    assert m2 >= m1                       # DQ can only lose accuracy
+    assert m2 <= 2.0 * m1 + 1e-3          # ... but not catastrophically
+
+
+def test_qtensor_is_pytree(rng):
+    w = rng.standard_normal((8, 128)).astype(np.float32)
+    q = quantize_blockwise(w, bits=4, block=64, solver="dp")
+    leaves = jax.tree_util.tree_leaves(q)
+    assert len(leaves) == 2
+    q2 = jax.tree_util.tree_map(lambda x: x, q)
+    assert isinstance(q2, QTensor)
+    # flows through jit
+    out = jax.jit(dequantize)(q)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(dequantize(q)))
+
+
+def test_quantize_params_policy(rng):
+    params = {
+        "layer": {"wq": jnp.asarray(rng.standard_normal((128, 64)), jnp.float32),
+                  "norm": jnp.ones((64,), jnp.float32),
+                  "bias": jnp.zeros((64,), jnp.float32)},
+        "embed": jnp.asarray(rng.standard_normal((128, 64)), jnp.float32),
+    }
+    tree, report = quantize_params(params, QuantPolicy(min_size=1024,
+                                                       solver="dp"))
+    assert isinstance(tree["layer"]["wq"], QTensor)
+    assert isinstance(tree["embed"], QTensor)
+    assert not isinstance(tree["layer"]["norm"], QTensor)
+    assert not isinstance(tree["layer"]["bias"], QTensor)
+    dense = dequantize_params(tree)
+    assert dense["layer"]["wq"].shape == (128, 64)
+    bits = param_bits(tree)
+    bits_dense = param_bits(params)
+    assert bits < 0.4 * bits_dense  # ~6/32 + fp leaves

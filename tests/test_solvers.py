@@ -1,0 +1,138 @@
+"""Solver correctness: exact DP vs brute force; heuristics vs the oracle."""
+import itertools
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import assume, given, settings, strategies as st
+
+from repro.core import reference, solve_flat, dp_boundaries, \
+    kmeans1d_boundaries
+from repro.core.grouping import boundaries_to_levels, scales_from_boundaries
+
+
+def brute_force_cost(a, g):
+    v = np.sort(np.abs(a))
+    n = v.size
+    best = np.inf
+    for cuts in itertools.combinations(range(1, n), g - 1):
+        bb = [0, *cuts, n]
+        c = sum(((v[bb[i]:bb[i + 1]] - v[bb[i]:bb[i + 1]].mean()) ** 2).sum()
+                for i in range(g))
+        best = min(best, c)
+    return best
+
+
+@pytest.mark.parametrize("n,g", [(8, 2), (10, 3), (12, 4)])
+def test_numpy_dp_matches_brute_force(rng, n, g):
+    a = rng.standard_normal(n)
+    _, _, cost = reference.dynamic_grouping(a, g)
+    assert cost == pytest.approx(brute_force_cost(a, g), rel=1e-9)
+
+
+@pytest.mark.parametrize("n,g", [(10, 3), (16, 4), (64, 8)])
+def test_jax_dp_matches_numpy_dp(rng, n, g):
+    """The vectorized TPU DP finds the same optimum as the reference DP."""
+    a = rng.standard_normal(n)
+    _, _, cost_ref = reference.dynamic_grouping(a, g)
+    v = jnp.sort(jnp.abs(jnp.asarray(a, jnp.float32)))
+    _, cost_jax = dp_boundaries(v, g)
+    assert float(cost_jax) == pytest.approx(cost_ref, rel=1e-4)
+
+
+def test_jax_dp_reconstruction(rng):
+    a = rng.standard_normal(64)
+    levels, scales = solve_flat(jnp.asarray(a, jnp.float32), 8, method="dp")
+    w_hat = np.sign(a) * np.asarray(scales)[np.asarray(levels)]
+    b, order, cost = reference.dynamic_grouping(a, 8)
+    w_ref, _, _ = reference.reconstruct(a, b, order)
+    assert ((a - w_hat) ** 2).sum() == pytest.approx(
+        ((a - w_ref) ** 2).sum(), rel=1e-4)
+
+
+@given(st.integers(2, 6), st.lists(
+    st.floats(0.0078125, 4, allow_nan=False, width=32).flatmap(
+        lambda m: st.sampled_from([m, -m])), min_size=8, max_size=40))
+@settings(max_examples=30, deadline=None)
+def test_heuristics_never_beat_dp(g, vals):
+    """Property: DP is optimal — GG/WGM/WGM-LO/kmeans cost >= DP cost.
+
+    Zero-free tensors only: exact zeros reconstruct exactly (the paper's
+    zero-loss special group) which the interval objective doesn't model.
+    """
+    a = np.asarray(vals)
+    _, _, dp_cost = reference.dynamic_grouping(a, g)
+
+    def sse_of(bounds, order):
+        w, _, _ = reference.reconstruct(a, bounds, order)
+        return ((a - w) ** 2).sum()
+
+    for solver in ("gg", "wgm", "wgm_lo"):
+        if solver == "gg":
+            b, o = reference.greedy_grouping(a, g)
+        elif solver == "wgm":
+            b, o = reference.windowed_greedy_merging(a, g, window=2)
+        else:
+            b, o = reference.wgm_local_opt(a, g, n_bins=8)
+        assert sse_of(b, o) >= dp_cost - 1e-6, solver
+
+
+@given(st.lists(st.floats(-4, 4, allow_nan=False, width=32),
+                min_size=16, max_size=64), st.integers(1, 4))
+@settings(max_examples=30, deadline=None)
+def test_more_groups_never_hurt_dp(vals, g):
+    a = np.asarray(vals)
+    _, _, c1 = reference.dynamic_grouping(a, g)
+    _, _, c2 = reference.dynamic_grouping(a, g + 1)
+    assert c2 <= c1 + 1e-9
+
+
+def test_kmeans_boundaries_valid(rng):
+    v = jnp.sort(jnp.abs(jnp.asarray(rng.standard_normal(512), jnp.float32)))
+    b = kmeans1d_boundaries(v, 32)
+    bn = np.asarray(b)
+    assert bn[0] == 0 and bn[-1] == 512
+    assert (np.diff(bn) >= 0).all()
+    levels = boundaries_to_levels(b, 512)
+    assert levels.min() >= 0 and levels.max() < 32
+
+
+def test_wdp_close_to_dp(rng):
+    """Windowed DP lands within 2% of the exact DP optimum."""
+    from repro.core import windowed_dp_boundaries
+    a = rng.standard_normal(256).astype(np.float32)
+    v = jnp.sort(jnp.abs(jnp.asarray(a)))
+    _, dp_cost = dp_boundaries(v, 8)
+    bk = windowed_dp_boundaries(v, 8, n_windows=64)
+    scales = scales_from_boundaries(v, bk)
+    lv = boundaries_to_levels(bk, 256)
+    sse = float(jnp.sum((v - scales[lv]) ** 2))
+    assert sse <= 1.02 * float(dp_cost) + 1e-6
+
+
+def test_kmeans_is_valid_but_local(rng):
+    """Plain Lloyd is a valid grouping but may sit at a local optimum —
+    the reason the per-tensor default is the windowed DP."""
+    a = rng.standard_normal(256).astype(np.float32)
+    v = jnp.sort(jnp.abs(jnp.asarray(a)))
+    _, dp_cost = dp_boundaries(v, 8)
+    bk = kmeans1d_boundaries(v, 8, iters=50)
+    scales = scales_from_boundaries(v, bk)
+    lv = boundaries_to_levels(bk, 256)
+    sse = float(jnp.sum((v - scales[lv]) ** 2))
+    assert float(dp_cost) - 1e-5 <= sse <= 2.0 * float(dp_cost)
+
+
+def test_wgm_window_degenerates_to_xnor(rng):
+    """Appendix D: window >= n collapses WGM to a single XNOR group set."""
+    a = rng.standard_normal(32)
+    b, o = reference.windowed_greedy_merging(a, 8, window=64)
+    assert len(b) == 2  # one group
+
+
+def test_zero_handling(rng):
+    a = rng.standard_normal(64)
+    a[::7] = 0.0
+    levels, scales = solve_flat(jnp.asarray(a, jnp.float32), 8, method="dp")
+    w_hat = np.sign(a) * np.asarray(scales)[np.asarray(levels)]
+    assert (w_hat[a == 0] == 0).all()  # exact zeros reconstruct to zero

@@ -1,0 +1,126 @@
+"""Training loop: learning works, optimizer variants, fault tolerance."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import smoke_config
+from repro.data import MarkovStream
+from repro.models import Model
+from repro.train import (AdamW, Checkpointer, OptConfig, PreemptionHandler,
+                         StragglerMonitor, init_state, make_train_step,
+                         train_loop)
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    import dataclasses
+    cfg = smoke_config("qwen1.5-0.5b")
+    cfg = dataclasses.replace(cfg, vocab_size=64, vocab_round=64, d_model=64,
+                              n_layers=2)
+    return Model(cfg)
+
+
+def _stream(model, batch=8, seq=32):
+    return MarkovStream(model.cfg.vocab_size, seq, batch, seed=3)
+
+
+def test_loss_decreases(tiny):
+    opt = AdamW(OptConfig(lr=3e-3, warmup_steps=5, total_steps=60))
+    data = iter(_stream(tiny))
+    state, metrics = train_loop(tiny, opt, data, steps=40,
+                                rng=jax.random.PRNGKey(0), log_every=0,
+                                log_fn=lambda *_: None)
+    first = float(jax.jit(tiny.loss)(state["params"],
+                                     next(iter(_stream(tiny))))[0])
+    stream = _stream(tiny)
+    uniform = np.log(tiny.cfg.vocab_size)
+    assert first < 0.9 * uniform, (first, uniform)
+    assert first > stream.entropy() - 0.1   # can't beat the chain's entropy
+
+
+def test_int8_moments_track_f32(tiny, rng):
+    data = _stream(tiny)
+    batches = [data.batch(i) for i in range(8)]
+    results = {}
+    for mdtype in ("f32", "int8"):
+        opt = AdamW(OptConfig(lr=1e-3, moment_dtype=mdtype,
+                              min_quant_size=128, warmup_steps=1))
+        state = init_state(tiny, opt, jax.random.PRNGKey(0))
+        step = jax.jit(make_train_step(tiny, opt))
+        for b in batches:
+            state, m = step(state, b)
+        results[mdtype] = float(m["loss"])
+    assert results["int8"] == pytest.approx(results["f32"], rel=0.05)
+
+
+def test_grad_clip():
+    from repro.train import clip_by_global_norm
+    tree = {"a": jnp.ones((4,)) * 100.0}
+    clipped, norm = clip_by_global_norm(tree, 1.0)
+    assert float(norm) == pytest.approx(200.0)
+    total = float(jnp.sqrt(jnp.sum(clipped["a"] ** 2)))
+    assert total == pytest.approx(1.0, rel=1e-4)
+
+
+def test_checkpoint_resume_identical(tiny, tmp_path):
+    """Train 6 steps straight == train 3, checkpoint, restore, train 3."""
+    opt = AdamW(OptConfig(lr=1e-3, warmup_steps=1))
+    data = _stream(tiny)
+
+    def run(steps, ckpt=None, state=None, start=0):
+        step = jax.jit(make_train_step(tiny, opt))
+        if state is None:
+            state = init_state(tiny, opt, jax.random.PRNGKey(0))
+        for i in range(start, steps):
+            state, m = step(state, data.batch(i))
+        return state, m
+
+    state_a, _ = run(6)
+
+    state_b, _ = run(3)
+    ck = Checkpointer(tmp_path / "ck", async_save=False)
+    ck.save(state_b, 3)
+    restored, step_n = ck.restore_latest(like=jax.tree_util.tree_map(
+        np.asarray, state_b))
+    assert step_n == 3
+    state_c, _ = run(6, state=jax.tree_util.tree_map(jnp.asarray, restored),
+                     start=3)
+
+    la = jax.tree_util.tree_leaves(state_a["params"])
+    lc = jax.tree_util.tree_leaves(state_c["params"])
+    for a, c in zip(la, lc):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(c),
+                                   atol=1e-6, rtol=1e-5)
+
+
+def test_preemption_checkpoints_and_resumes(tiny, tmp_path):
+    opt = AdamW(OptConfig(lr=1e-3, warmup_steps=1))
+    ck = Checkpointer(tmp_path / "ck", async_save=False)
+    handler = PreemptionHandler(signals=())
+    calls = {"n": 0}
+
+    def should_stop():
+        calls["n"] += 1
+        return calls["n"] >= 4          # preempt mid-run
+
+    state, _ = train_loop(tiny, opt, iter(_stream(tiny)), steps=50,
+                          rng=jax.random.PRNGKey(0), checkpointer=ck,
+                          checkpoint_every=100, should_stop=should_stop,
+                          log_every=0, log_fn=lambda *_: None)
+    saved = ck.steps()
+    assert saved, "preemption must leave a checkpoint"
+
+    # auto-resume picks up from the preemption checkpoint
+    state2, _ = train_loop(tiny, opt, iter(_stream(tiny)), steps=saved[-1] + 2,
+                           rng=jax.random.PRNGKey(0), checkpointer=ck,
+                           log_every=0, log_fn=lambda *_: None)
+    assert int(state2["opt"]["step"]) >= saved[-1]
+
+
+def test_straggler_monitor():
+    mon = StragglerMonitor(threshold=2.0)
+    for step in range(20):
+        mon.record(step, 0.1)
+    mon.record(20, 0.5)
+    assert mon.flagged and mon.flagged[-1][0] == 20
