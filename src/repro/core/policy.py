@@ -109,7 +109,8 @@ def param_bits(params):
     def visit(leaf):
         nonlocal total
         if isinstance(leaf, QTensor):
-            total += leaf.codes.size * leaf.bits + leaf.scales.size * 16
+            scale_bits = jnp.dtype(leaf.scales.dtype).itemsize * 8
+            total += leaf.codes.size * leaf.bits + leaf.scales.size * scale_bits
         elif hasattr(leaf, "size"):
             total += leaf.size * jnp.dtype(leaf.dtype).itemsize * 8
         return leaf

@@ -4,6 +4,8 @@ msb_matmul       — fused MSB int4 dequantize + matmul (the paper's weights
                    executed without decode-to-bf16 materialization)
 flash_attention  — tiled online-softmax attention forward with causal tile
                    skipping (prefill hot-spot)
+paged_attention  — decode attention streaming KV pages via block tables
+                   (continuous-batching serving hot-spot; serve/continuous)
 
 Each kernel ships ops.py (jit'd dispatch) + ref.py (pure-jnp oracle) and is
 validated in interpret mode over shape/dtype sweeps (tests/test_kernels.py).

@@ -1,0 +1,6 @@
+from .ops import paged_attention
+from .paged_attention import paged_attention_decode
+from .ref import paged_attention_decode_ref
+
+__all__ = ["paged_attention", "paged_attention_decode",
+           "paged_attention_decode_ref"]

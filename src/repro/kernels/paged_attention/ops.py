@@ -1,0 +1,21 @@
+"""Dispatch wrapper: Pallas kernel on TPU, jnp reference elsewhere."""
+from __future__ import annotations
+
+import jax
+
+from .paged_attention import paged_attention_decode
+from .ref import paged_attention_decode_ref
+
+
+def paged_attention(q, k_pool, v_pool, block_tables, kv_lens, *, softcap=0.0,
+                    scale=None, use_kernel=None, interpret=None):
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if use_kernel:
+        return paged_attention_decode(q, k_pool, v_pool, block_tables,
+                                      kv_lens, softcap=softcap, scale=scale,
+                                      interpret=interpret)
+    return paged_attention_decode_ref(q, k_pool, v_pool, block_tables,
+                                      kv_lens, softcap=softcap, scale=scale)

@@ -1,0 +1,95 @@
+"""Pallas TPU kernel: paged-attention decode (one query token per sequence).
+
+Grid: (batch, kv_heads) — each cell handles one sequence's ``rep`` query
+heads for one KV head. The kernel walks the sequence's block table with
+``jax.lax.fori_loop`` (dynamic trip count = pages actually used, so short
+sequences skip dead pool pages entirely), loading one (page_size, d) K/V
+tile per iteration straight from the global pool with a dynamic page index
+— the gather the pure-JAX reference (models.attention.paged_attention)
+materializes as a (B, S_max, KV, d) copy never exists here.
+
+Layout note: the pool keeps its natural (n_pages, page_size, KV, d) layout;
+the BlockSpec collapses the KV dim per grid cell so each cell streams only
+its own head's tiles. This is the serving-path stub: correctness-validated
+in interpret mode on CPU (tests/test_paged_attention.py); real-TPU tile
+tuning (page_size multiples of the 128-lane register, scalar-prefetched
+block tables via ``pltpu.PrefetchScalarGridSpec``) is a recorded follow-up
+in DESIGN.md §8.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_NEG_INF = -2.0e38
+
+
+def _kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref, *, ps, softcap,
+            scale):
+    q = q_ref[...].astype(jnp.float32) * scale            # (rep, d)
+    rep, d = q.shape
+    kv_len = len_ref[0]
+    n_used = (kv_len + ps - 1) // ps                       # dynamic bound
+
+    def body(j, carry):
+        acc, m_i, l_i = carry
+        page = bt_ref[j]
+        kt = pl.load(k_ref, (pl.dslice(page, 1), slice(None),
+                             slice(None)))[0]              # (ps, d)
+        vt = pl.load(v_ref, (pl.dslice(page, 1), slice(None), slice(None)))[0]
+        s = jnp.dot(q, kt.astype(jnp.float32).T,
+                    preferred_element_type=jnp.float32)    # (rep, ps)
+        if softcap > 0:
+            s = softcap * jnp.tanh(s / softcap)
+        kpos = j * ps + jax.lax.iota(jnp.int32, ps)
+        s = jnp.where((kpos < kv_len)[None, :], s, _NEG_INF)
+        m_new = jnp.maximum(m_i, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_i - m_new)
+        l_new = l_i * corr + jnp.sum(p, axis=-1)
+        pv = jnp.dot(p.astype(vt.dtype), vt,
+                     preferred_element_type=jnp.float32)
+        acc = acc * corr[:, None] + pv
+        return acc, m_new, l_new
+
+    acc0 = jnp.zeros((rep, d), jnp.float32)
+    m0 = jnp.full((rep,), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((rep,), jnp.float32)
+    acc, _, l_i = jax.lax.fori_loop(0, n_used, body, (acc0, m0, l0))
+    o_ref[...] = (acc / jnp.maximum(l_i, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("softcap", "scale", "interpret"))
+def paged_attention_decode(q, k_pool, v_pool, block_tables, kv_lens, *,
+                           softcap=0.0, scale=None, interpret=False):
+    """q: (B, H, d); pools: (n_pages, page_size, KV, d); block_tables:
+    (B, max_pages) int32; kv_lens: (B,) int32. Returns (B, H, d)."""
+    b, h, d = q.shape
+    n_pages, ps, kv, _ = k_pool.shape
+    rep = h // kv
+    scale = float(scale if scale is not None else d ** -0.5)
+    qr = q.reshape(b, kv, rep, d)
+    lens2d = kv_lens.reshape(b, 1).astype(jnp.int32)
+    mp = block_tables.shape[1]
+
+    grid = (b, kv)
+    out = pl.pallas_call(
+        functools.partial(_kernel, ps=ps, softcap=float(softcap),
+                          scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, mp), lambda i, j: (i, 0)),           # tables
+            pl.BlockSpec((None, 1), lambda i, j: (i, 0)),            # lens
+            pl.BlockSpec((None, None, rep, d), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((n_pages, ps, None, d), lambda i, j: (0, 0, j, 0)),
+            pl.BlockSpec((n_pages, ps, None, d), lambda i, j: (0, 0, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, None, rep, d),
+                               lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kv, rep, d), q.dtype),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), lens2d, qr, k_pool, v_pool)
+    return out.reshape(b, h, d)

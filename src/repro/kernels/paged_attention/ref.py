@@ -1,0 +1,19 @@
+"""Oracle for the Pallas paged-attention kernel: the pure-jnp gather
+implementation from models/attention.py (itself validated against dense
+flash/decode attention in tests/test_paged_attention.py), restricted to the
+kernel's single-query-token decode case.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ...models.attention import paged_attention as _pa
+
+
+def paged_attention_decode_ref(q, k_pool, v_pool, block_tables, kv_lens, *,
+                               softcap=0.0, scale=None):
+    """q: (B, H, d) — one decode token per sequence. Returns (B, H, d)."""
+    q_pos = (kv_lens - 1).reshape(-1, 1).astype(jnp.int32)
+    out = _pa(q[:, None], k_pool, v_pool, block_tables, q_pos,
+              kv_lens.astype(jnp.int32), softcap=softcap, scale=scale)
+    return out[:, 0]

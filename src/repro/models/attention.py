@@ -266,3 +266,67 @@ def decode_attention(q, k_cache, v_cache, positions, cur_pos, *, window=0,
                      preferred_element_type=jnp.float32)
     out = out / jnp.maximum(l, 1e-30)[..., None]
     return out.reshape(b, 1, h, d).astype(q.dtype)
+
+
+def paged_attention(q, k_pool, v_pool, block_tables, q_pos, kv_lens, *,
+                    window=0, softcap=0.0, scale=None):
+    """Attention against a paged KV pool, gathering pages via block tables.
+
+    q: (B, T, H, d) — T >= 1 query tokens per sequence (decode T=1, chunked
+    prefill T=chunk); k_pool/v_pool: (n_pages, page_size, KV, d) global page
+    pool; block_tables: (B, max_pages) int32 page ids, position i of sequence
+    b lives at (block_tables[b, i // page_size], i % page_size); q_pos:
+    (B, T) absolute positions of the query tokens (-1 = padding row);
+    kv_lens: (B,) valid cache length *including* the current chunk.
+
+    This is the pure-JAX reference for the Pallas paged-attention kernel
+    (kernels/paged_attention): it materializes the gathered (B, S_max, KV, d)
+    K/V, which the kernel avoids by streaming pages. Causality is enforced by
+    absolute position (kpos <= q_pos), so intra-chunk causal masking in
+    chunked prefill falls out for free.
+    """
+    b, t, h, d = q.shape
+    n_pages, ps, kv, _ = k_pool.shape
+    mp = block_tables.shape[1]
+    rep = h // kv
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    window = jnp.asarray(window, jnp.int32)
+    k = k_pool[block_tables].reshape(b, mp * ps, kv, d)
+    v = v_pool[block_tables].reshape(b, mp * ps, kv, d)
+    kpos = jnp.arange(mp * ps, dtype=jnp.int32)
+    qh = q.reshape(b, t, kv, rep, d).astype(k_pool.dtype)
+    s = jnp.einsum("btkrd,bskd->btkrs", qh, k,
+                   preferred_element_type=jnp.float32) * scale
+    s = _softcap(s, softcap)
+    valid = (kpos[None, None, :] <= q_pos[:, :, None])
+    valid &= kpos[None, None, :] < kv_lens[:, None, None]
+    valid &= (window <= 0) | (kpos[None, None, :] > q_pos[:, :, None] - window)
+    s = jnp.where(valid[:, :, None, None, :], s, _NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1)
+    out = jnp.einsum("btkrs,bskd->btkrd", p.astype(v_pool.dtype), v,
+                     preferred_element_type=jnp.float32)
+    out = out / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, t, h, d).astype(q.dtype)
+
+
+def paged_write(k_pool, v_pool, k_new, v_new, block_tables, q_pos):
+    """Scatter new K/V rows into the page pools via block tables.
+
+    k_new/v_new: (B, T, KV, d); q_pos (B, T) absolute positions (-1 = pad).
+    Padding rows write to page 0, which the allocator reserves as scratch
+    (never handed to a sequence), so duplicate pad writes are harmless.
+    """
+    n_pages, ps, kv, d = k_pool.shape
+    page = jnp.take_along_axis(
+        block_tables, jnp.maximum(q_pos, 0) // ps, axis=1)
+    flat = jnp.where(q_pos >= 0, page * ps + jnp.maximum(q_pos, 0) % ps, 0)
+    flat = flat.reshape(-1)
+    k_pool = k_pool.reshape(n_pages * ps, kv, d).at[flat].set(
+        k_new.reshape(-1, kv, d).astype(k_pool.dtype)).reshape(
+            n_pages, ps, kv, d)
+    v_pool = v_pool.reshape(n_pages * ps, kv, d).at[flat].set(
+        v_new.reshape(-1, kv, d).astype(v_pool.dtype)).reshape(
+            n_pages, ps, kv, d)
+    return k_pool, v_pool

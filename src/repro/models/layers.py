@@ -14,7 +14,8 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from .attention import decode_attention, flash_attention
+from .attention import (decode_attention, flash_attention, paged_attention,
+                        paged_write)
 
 
 def rms_norm(x, scale, eps=1e-6):
@@ -95,13 +96,17 @@ def _cp_attention(q, k, v, parallel, *, causal, window, softcap, scale,
 
 def attention_layer(p, x, cfg, positions, *, window=0, cache=None,
                     cur_pos=None, xattn_kv=None, causal=True, cross=False,
-                    decode_positions=None, parallel=None):
+                    decode_positions=None, parallel=None, paged=None):
     """Self- or cross-attention.
 
     Training/prefill: cache is None -> flash attention over the sequence;
     returns the (roped) k/v as the cache for subsequent decode.
     Decode: cache = dict(k, v) ring buffers; ``decode_positions`` (B, S) is
     the *shared* per-entry position table maintained once at the model level.
+    Paged serving: ``paged`` = dict(block_tables, q_pos, kv_lens) and cache
+    holds the global page pools {k, v}: (n_pages, page_size, KV, hd); the
+    new roped k/v is scattered into the pools at q_pos and attention gathers
+    each sequence's pages (decode AND chunked prefill use this one path).
     Cross-attention decode (``cross=True``): cache holds the static encoder
     k/v from prefill.
     Returns (out, new_cache).
@@ -115,6 +120,22 @@ def attention_layer(p, x, cfg, positions, *, window=0, cache=None,
         q = constraint(q, qkv_ax, parallel)
     softcap = cfg.attn_softcap
     scale = cfg.head_dim_ ** -0.5 if cfg.query_scale == 0 else cfg.query_scale
+
+    if paged is not None:
+        q_pos = paged["q_pos"]
+        k = dense(x, p["wk"], p.get("bk")).reshape(b, -1, kv, hd)
+        v = dense(x, p["wv"], p.get("bv")).reshape(b, -1, kv, hd)
+        if cfg.use_rope:
+            safe_pos = jnp.maximum(q_pos, 0)
+            q = rope(q, safe_pos, cfg.rope_theta)
+            k = rope(k, safe_pos, cfg.rope_theta)
+        k_pool, v_pool = paged_write(cache["k"], cache["v"], k, v,
+                                     paged["block_tables"], q_pos)
+        out = paged_attention(q, k_pool, v_pool, paged["block_tables"],
+                              q_pos, paged["kv_lens"], window=window,
+                              softcap=softcap, scale=scale)
+        out = out.reshape(b, -1, h * hd)
+        return dense(out, p["wo"]), {"k": k_pool, "v": v_pool}
 
     if cache is None:
         kv_src = xattn_kv if xattn_kv is not None else x

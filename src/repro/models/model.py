@@ -167,6 +167,56 @@ class Model:
         new_cache["layers"] = layer_cache
         return logits, new_cache
 
+    # -- paged serving -------------------------------------------------------
+    def supports_paged(self):
+        """Paged serving covers decoder-only attention stacks (any FFN kind);
+        ssm/xlstm/enc-dec caches are per-sequence state, not pages."""
+        cfg = self.cfg
+        return (not cfg.is_encdec and cfg.frontend == "none"
+                and all(m == "attn" for m, _ in layer_plan(cfg, "dec")))
+
+    def init_paged_pools(self, num_pages, page_size):
+        """Global K/V page pools, nested like the decode cache's ``layers``
+        subtree: leaves (n_periods, num_pages, page_size, KV, head_dim).
+        Page 0 is the allocator's reserved scratch page (pad-row writes)."""
+        cfg = self.cfg
+        assert self.supports_paged(), f"{cfg.name}: not a paged-servable arch"
+        p = n_periods(cfg, "dec")
+        kv, hd = cfg.n_kv_heads, cfg.head_dim_
+        shape = (p, num_pages, page_size, kv, hd)
+        layers = {f"s{slot}": {"attn": {"k": jnp.zeros(shape, cfg.dtype),
+                                        "v": jnp.zeros(shape, cfg.dtype)}}
+                  for slot, _ in enumerate(layer_plan(cfg, "dec"))}
+        return {"layers": layers}
+
+    def paged_step(self, params, pools, tokens, q_pos, kv_lens, block_tables,
+                   parallel=None):
+        """One serving step over a packed batch with a paged KV cache.
+
+        tokens: (B, T) int32 (T=1 decode, T=chunk chunked prefill); q_pos:
+        (B, T) absolute position of each token, -1 for padding (inactive
+        batch rows / chunk tail); kv_lens: (B,) cache length including this
+        chunk; block_tables: (B, max_pages) int32.
+
+        Writes the new K/V into the pools and returns (logits at each row's
+        last valid token (B, V), new_pools). Padding rows produce garbage
+        logits the caller discards.
+        """
+        cfg = self.cfg
+        x = self._embed(params, jnp.maximum(tokens, 0))
+        if not cfg.use_rope:
+            x = x + _sinusoid(jnp.maximum(q_pos, 0),
+                              cfg.d_model).astype(cfg.dtype)
+        x, layer_pools, _ = forward_stack(
+            params["dec"], x, cfg, positions=q_pos, parallel=parallel,
+            cache=pools["layers"],
+            paged={"block_tables": block_tables, "q_pos": q_pos,
+                   "kv_lens": kv_lens})
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        last = jnp.maximum(jnp.sum((q_pos >= 0).astype(jnp.int32), 1) - 1, 0)
+        hidden = jnp.take_along_axis(x, last[:, None, None], axis=1)[:, 0]
+        return self._logits(params, hidden), {"layers": layer_pools}
+
     # -- cache specs ---------------------------------------------------------
     def cache_defs(self, batch, seq_len):
         """(shape, dtype, logical_axes) per cache leaf, nested like the cache."""

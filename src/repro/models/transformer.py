@@ -232,7 +232,7 @@ def _shard(x, spec, parallel):
 
 
 def _block(x, lp, cfg, mixer, ffn, *, window, positions, cur_pos, cache,
-           enc_out, parallel, cross, decode_positions=None):
+           enc_out, parallel, cross, decode_positions=None, paged=None):
     """One (mixer + ffn) residual block. Returns (x, new_cache, aux)."""
     aux = jnp.float32(0.0)
     h = rms_norm(x, lp["norm1"], cfg.norm_eps)
@@ -241,7 +241,8 @@ def _block(x, lp, cfg, mixer, ffn, *, window, positions, cur_pos, cache,
             lp["attn"], h, cfg, positions, window=window,
             cache=None if cache is None else cache.get("attn"),
             cur_pos=cur_pos, causal=(mixer == "attn"),
-            decode_positions=decode_positions, parallel=parallel)
+            decode_positions=decode_positions, parallel=parallel,
+            paged=paged)
     elif mixer == "mamba":
         y, new_mix_cache = ssm.mamba_layer(
             lp["mamba"], h, cfg, None if cache is None else cache.get("mamba"),
@@ -304,7 +305,7 @@ def _window_array(cfg, stack="dec"):
 
 def forward_stack(params_stack, x, cfg, *, stack="dec", positions,
                   parallel=None, cache=None, cur_pos=None, enc_out=None,
-                  collect_cache=False, decode_positions=None):
+                  collect_cache=False, decode_positions=None, paged=None):
     """Scan the layer stack. Returns (x, new_cache_stacked, aux_sum)."""
     plan = layer_plan(cfg, stack)
     cross = cfg.is_encdec and stack == "dec"
@@ -323,7 +324,7 @@ def forward_stack(params_stack, x, cfg, *, stack="dec", positions,
                     x_, lp_, cfg, mixer, ffn, window=win_,
                     positions=positions, cur_pos=cur_pos, cache=cache_,
                     enc_out=enc_out, parallel=parallel, cross=cross,
-                    decode_positions=decode_positions)
+                    decode_positions=decode_positions, paged=paged)
 
             if cfg.remat and len(plan) > 1:
                 # nested remat: the period backward replays one block at a

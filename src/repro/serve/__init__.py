@@ -1,1 +1,7 @@
+from .continuous import ContinuousEngine
 from .engine import ServeEngine
+from .paged_cache import OutOfPages, PagedKVCache
+from .scheduler import Request, Scheduler, Sequence
+
+__all__ = ["ContinuousEngine", "OutOfPages", "PagedKVCache", "Request",
+           "Scheduler", "Sequence", "ServeEngine"]

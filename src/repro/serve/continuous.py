@@ -1,0 +1,175 @@
+"""Continuous-batching serving engine over a paged KV cache.
+
+Step-driven API: ``submit()`` enqueues requests, each ``step()`` runs one
+scheduler-chosen unit of work (a prefill chunk or a packed decode batch),
+``collect()`` drains finished outputs. The data plane is a handful of jit
+traces of one function (``Model.paged_step``):
+
+  * prefill trace:  tokens (1, prefill_chunk) — one sequence, chunked
+  * decode  traces: tokens (2^k, 1), 2^k <= max_batch — the decoding set
+    padded to the next power of two (bucketed shapes bound retraces at
+    log2(max_batch)+1 while keeping padding waste under 2x at low
+    concurrency)
+
+All shapes are static; inactive rows / chunk tails carry q_pos == -1 and
+scatter into the reserved scratch page, so no retracing ever happens once
+the buckets are warm. Greedy sampling happens on host from the returned
+last-token logits, which is what makes output token-identical to the static
+``ServeEngine`` (same model math, same argmax).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .paged_cache import PagedKVCache
+from .scheduler import DECODE, Request, Scheduler, Sequence
+
+# Module-level jit, model static (frozen dataclass, hashable): every engine
+# for the same model shares one compile cache, and the pools are donated so
+# the per-step cache update is in place (donation is a no-op warning on
+# backends without buffer aliasing, e.g. CPU, so it's gated).
+_DONATE = (1,) if jax.default_backend() in ("tpu", "gpu") else ()
+
+
+@functools.partial(jax.jit, static_argnums=(0,), donate_argnums=_DONATE)
+def _paged_step(model, pools, params, tokens, q_pos, kv_lens, block_tables):
+    return model.paged_step(params, pools, tokens, q_pos, kv_lens,
+                            block_tables)
+
+
+@dataclasses.dataclass
+class ContinuousEngine:
+    model: object
+    params: object
+    max_batch: int = 8
+    page_size: int = 16
+    num_pages: int = 128
+    max_seq: Optional[int] = None          # bounds block-table width
+    max_pages_per_seq: Optional[int] = None
+    prefill_chunk: int = 32
+    parallel: object = None
+
+    def __post_init__(self):
+        if not self.model.supports_paged():
+            raise ValueError(
+                f"{self.model.cfg.name}: paged serving needs a decoder-only "
+                "attention stack (ssm/xlstm/enc-dec caches are not paged)")
+        mpps = self.max_pages_per_seq
+        if mpps is None and self.max_seq is not None:
+            mpps = -(-self.max_seq // self.page_size)
+        self.cache = PagedKVCache(
+            self.model, num_pages=self.num_pages, page_size=self.page_size,
+            max_seqs=self.max_batch, max_pages_per_seq=mpps)
+        self.scheduler = Scheduler(self.cache, self.max_batch,
+                                   self.prefill_chunk)
+        if self.parallel is None:
+            self._step_fn = functools.partial(_paged_step, self.model)
+        else:                              # parallel objects aren't hashable
+            self._step_fn = jax.jit(
+                lambda pools, p, toks, qpos, kvl, bt: self.model.paged_step(
+                    p, pools, toks, qpos, kvl, bt, self.parallel))
+        self._next_id = 0
+        self._seqs: Dict[int, Sequence] = {}
+        self._finished: Dict[int, np.ndarray] = {}
+        self.n_steps = 0
+        self.n_tokens_out = 0
+        self.n_work_positions = 0     # device token-positions incl. padding
+
+    # -- API ----------------------------------------------------------------
+    def submit(self, prompt, max_new_tokens, eos_id=None) -> int:
+        req_id = self._next_id
+        self._next_id += 1
+        req = Request(req_id, np.asarray(prompt, np.int32).reshape(-1),
+                      int(max_new_tokens), eos_id)
+        self._seqs[req_id] = self.scheduler.submit(req)
+        return req_id
+
+    def step(self) -> bool:
+        """Run one unit of work. Returns False when there is nothing to do."""
+        work = self.scheduler.schedule()
+        if work is None:
+            return False
+        self.n_steps += 1
+        if work[0] == "prefill":
+            self._run_prefill(*work[1:])
+        else:
+            self._run_decode(work[1])
+        return True
+
+    def collect(self) -> Dict[int, np.ndarray]:
+        """Drain outputs of requests finished since the last collect()."""
+        out, self._finished = self._finished, {}
+        return out
+
+    def run(self):
+        """Drive until all submitted work is complete; return all outputs."""
+        done: Dict[int, np.ndarray] = {}
+        while self.scheduler.has_work:
+            if not self.step():
+                break
+            done.update(self.collect())
+        done.update(self.collect())
+        return done
+
+    # -- work kinds ----------------------------------------------------------
+    def _run_prefill(self, seq, chunk_tokens, start):
+        c = self.prefill_chunk
+        n = len(chunk_tokens)
+        tokens = np.zeros((1, c), np.int32)
+        tokens[0, :n] = chunk_tokens
+        q_pos = np.full((1, c), -1, np.int32)
+        q_pos[0, :n] = start + np.arange(n)
+        kv_lens = np.asarray([start + n], np.int32)
+        logits = self._dispatch([seq.slot], tokens, q_pos, kv_lens)
+        seq.cache_len = start + n
+        self.cache.commit(seq.slot, seq.cache_len)
+        if seq.cache_len == len(seq.tokens):        # prompt fully in cache
+            if not seq.is_done():                   # e.g. max_new_tokens=0
+                self._sample_and_advance(seq, logits[0])
+            seq.state = DECODE
+            self._maybe_finish(seq)
+
+    def _run_decode(self, seqs):
+        b = 1                           # bucket: next power of two
+        while b < len(seqs):
+            b *= 2
+        slots = [-1] * b
+        tokens = np.zeros((b, 1), np.int32)
+        q_pos = np.full((b, 1), -1, np.int32)
+        kv_lens = np.zeros((b,), np.int32)
+        for i, seq in enumerate(seqs):
+            slots[i] = seq.slot
+            tokens[i, 0] = seq.generated[-1]
+            q_pos[i, 0] = seq.n_total - 1
+            kv_lens[i] = seq.n_total
+        logits = self._dispatch(slots, tokens, q_pos, kv_lens)
+        for i, seq in enumerate(seqs):
+            seq.cache_len = seq.n_total
+            self.cache.commit(seq.slot, seq.cache_len)
+            self._sample_and_advance(seq, logits[i])
+            self._maybe_finish(seq)
+
+    # -- helpers --------------------------------------------------------------
+    def _dispatch(self, slots, tokens, q_pos, kv_lens):
+        self.n_work_positions += tokens.size
+        bt = self.cache.table_rows(slots)
+        logits, self.cache.pools = self._step_fn(
+            self.cache.pools, self.params, jnp.asarray(tokens),
+            jnp.asarray(q_pos), jnp.asarray(kv_lens), bt)
+        return np.asarray(logits)
+
+    def _sample_and_advance(self, seq, logits):
+        seq.generated.append(int(np.argmax(logits)))
+        self.n_tokens_out += 1
+
+    def _maybe_finish(self, seq):
+        if seq.is_done():
+            self._finished[seq.req.req_id] = np.asarray(seq.generated,
+                                                        np.int32)
+            self.scheduler.finish(seq)

@@ -1,9 +1,14 @@
-"""Batched serving engine: prefill -> ring-buffer decode, quantized weights.
+"""Static-batch serving engine: prefill -> ring-buffer decode.
 
 The engine demonstrates the paper's deployment story end-to-end: params may
 be a mixed pytree with MSB ``QTensor`` leaves (quantize-on-load via
 core.policy); the model dequantizes per layer (simulation mode, paper Sec.
 4.1) or routes through the Pallas fused kernel on TPU.
+
+This is the non-batched (fixed batch, lockstep decode) fallback; production
+traffic goes through ``serve.continuous.ContinuousEngine``, which adds
+request scheduling and a paged KV cache (DESIGN.md §8). It also covers the
+decoder-only architectures paging does not (ssm/xlstm recurrent state).
 """
 from __future__ import annotations
 
@@ -28,20 +33,31 @@ class ServeEngine:
         self._decode = jax.jit(
             lambda p, c, t, pos: self.model.decode_step(p, c, t, pos,
                                                         self.parallel))
+        self._score = jax.jit(
+            lambda p, b: self.model.loss(p, b, self.parallel))
 
     def _grow_cache(self, cache, prompt_len):
-        """Re-home prefill caches (length P) into max_seq ring buffers."""
+        """Re-home prefill caches (length P) into max_seq ring buffers.
+
+        K/V leaves are identified by their position in the cache pytree
+        (the ``attn`` subtree's ``k``/``v`` entries, per Model.cache_defs) —
+        not by shape, which false-positives whenever an unrelated state leaf
+        happens to have dim 2 == prompt_len. ``xattn`` leaves are static
+        encoder K/V and must NOT grow (decode's cross branch attends every
+        cache row, so zero-padding would corrupt it)."""
         s = self.max_seq
 
-        def grow(leaf):
-            if (hasattr(leaf, "ndim") and leaf.ndim >= 3
-                    and leaf.shape[2] == prompt_len):   # (P?, B, S, ...) k/v
+        def grow(path, leaf):
+            keys = [p.key for p in path if hasattr(p, "key")]
+            if (len(keys) >= 2 and keys[-1] in ("k", "v")
+                    and keys[-2] == "attn"):             # (P, B, S, KV, hd)
                 pad = [(0, 0)] * leaf.ndim
                 pad[2] = (0, s - prompt_len)
                 return jnp.pad(leaf, pad)
             return leaf
 
-        new = {"layers": jax.tree_util.tree_map(grow, cache["layers"])}
+        new = {"layers": jax.tree_util.tree_map_with_path(grow,
+                                                          cache["layers"])}
         if "pos" in cache:
             pos = jnp.full((cache["pos"].shape[0], s), -1, jnp.int32)
             new["pos"] = jax.lax.dynamic_update_slice_in_dim(
@@ -74,7 +90,5 @@ class ServeEngine:
         """Mean next-token NLL of ``tokens`` (B, S) under the model."""
         batch = {"tokens": tokens[:, :-1],
                  "labels": tokens[:, 1:].astype(jnp.int32)}
-        loss, _ = jax.jit(
-            lambda p, b: self.model.loss(p, b, self.parallel))(
-                self.params, batch)
+        loss, _ = self._score(self.params, batch)
         return float(loss)

@@ -1,0 +1,163 @@
+"""Paged KV-cache: a global page pool + per-sequence block tables.
+
+The data plane (the pools themselves) is a device pytree written inside the
+jitted serving step (models.Model.paged_step); this class is the *control*
+plane: a host-side allocator that hands out fixed-size pages from a free
+list, maintains the block table and length of every sequence slot, and
+reference-counts pages so forked sequences share their common prefix
+(copy-on-write only for the final partial page, which is the only page that
+can still be written).
+
+Page 0 is reserved as a scratch page: padding rows of the packed batch
+scatter their (garbage) K/V there, so the jitted step needs no masking
+branches. The allocator never hands page 0 to a sequence.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class OutOfPages(Exception):
+    """Raised when a reservation cannot be satisfied (caller preempts)."""
+
+
+class PagedKVCache:
+    def __init__(self, model, *, num_pages, page_size, max_seqs,
+                 max_pages_per_seq=None):
+        if num_pages < 2:
+            raise ValueError("need >= 2 pages (page 0 is reserved scratch)")
+        self.page_size = int(page_size)
+        self.num_pages = int(num_pages)
+        self.max_seqs = int(max_seqs)
+        self.max_pages_per_seq = int(max_pages_per_seq or num_pages - 1)
+        self.pools = model.init_paged_pools(num_pages, page_size)
+        # host metadata
+        self.block_tables = np.zeros((max_seqs, self.max_pages_per_seq),
+                                     np.int32)
+        self.seq_pages: List[List[int]] = [[] for _ in range(max_seqs)]
+        self.seq_lens = np.zeros((max_seqs,), np.int32)
+        self.ref_counts = np.zeros((num_pages,), np.int32)
+        self.ref_counts[0] = 1                    # scratch page, never freed
+        self._free = list(range(num_pages - 1, 0, -1))    # LIFO free list
+        self._free_slots = list(range(max_seqs - 1, -1, -1))
+        donate = (0,) if jax.default_backend() in ("tpu", "gpu") else ()
+        self._copy_page = jax.jit(self._copy_page_impl, donate_argnums=donate)
+
+    # -- capacity ----------------------------------------------------------
+    @property
+    def n_free_pages(self):
+        return len(self._free)
+
+    @property
+    def n_free_slots(self):
+        return len(self._free_slots)
+
+    def pages_for(self, n_tokens):
+        return -(-int(n_tokens) // self.page_size)
+
+    def fits(self, n_tokens):
+        """Whole-sequence capacity check (used at submit/admission time)."""
+        need = self.pages_for(n_tokens)
+        return need <= self.max_pages_per_seq and need <= self.num_pages - 1
+
+    # -- slots -------------------------------------------------------------
+    def alloc_slot(self) -> Optional[int]:
+        if not self._free_slots:
+            return None
+        slot = self._free_slots.pop()
+        self.seq_pages[slot] = []
+        self.seq_lens[slot] = 0
+        self.block_tables[slot] = 0
+        return slot
+
+    def release(self, slot):
+        """Free the slot: decref every page, returning dead pages to the
+        free list (reverse order so LIFO reuse stays prefix-friendly)."""
+        for page in reversed(self.seq_pages[slot]):
+            self.ref_counts[page] -= 1
+            assert self.ref_counts[page] >= 0
+            if self.ref_counts[page] == 0:
+                self._free.append(page)
+        self.seq_pages[slot] = []
+        self.seq_lens[slot] = 0
+        self.block_tables[slot] = 0
+        self._free_slots.append(slot)
+
+    # -- pages -------------------------------------------------------------
+    def reserve(self, slot, n_tokens):
+        """Grow ``slot``'s block table to cover ``n_tokens``. All-or-nothing:
+        raises OutOfPages without partial allocation if the pool is short."""
+        need = self.pages_for(n_tokens) - len(self.seq_pages[slot])
+        if need <= 0:
+            return
+        if self.pages_for(n_tokens) > self.max_pages_per_seq:
+            raise OutOfPages(f"slot {slot}: {n_tokens} tokens exceed "
+                             f"max_pages_per_seq={self.max_pages_per_seq}")
+        if need > len(self._free):
+            raise OutOfPages(f"slot {slot}: need {need} pages, "
+                             f"{len(self._free)} free")
+        for _ in range(need):
+            page = self._free.pop()
+            self.ref_counts[page] += 1
+            self.block_tables[slot, len(self.seq_pages[slot])] = page
+            self.seq_pages[slot].append(page)
+
+    def commit(self, slot, n_tokens):
+        """Record that ``n_tokens`` of ``slot`` are now written device-side."""
+        assert self.pages_for(n_tokens) <= len(self.seq_pages[slot])
+        self.seq_lens[slot] = n_tokens
+
+    # -- prefix sharing ----------------------------------------------------
+    def fork(self, src_slot) -> Optional[int]:
+        """Fork ``src_slot``: full pages are shared by refcount; a partial
+        final page is copied device-side (copy-on-write at fork time — full
+        pages are never written again, so sharing them is safe)."""
+        dst = self.alloc_slot()
+        if dst is None:
+            return None
+        n = int(self.seq_lens[src_slot])
+        n_full = n // self.page_size
+        partial = n % self.page_size > 0
+        if partial and not self._free:
+            self.release(dst)
+            return None
+        try:
+            for i, page in enumerate(self.seq_pages[src_slot][:n_full]):
+                self.ref_counts[page] += 1
+                self.block_tables[dst, i] = page
+                self.seq_pages[dst].append(page)
+            if partial:
+                page = self._free.pop()
+                self.ref_counts[page] += 1
+                self.block_tables[dst, n_full] = page
+                self.seq_pages[dst].append(page)
+                src_page = self.seq_pages[src_slot][n_full]
+                self.pools = self._copy_page(self.pools, src_page, page)
+        except Exception:
+            self.release(dst)
+            raise
+        self.seq_lens[dst] = n
+        return dst
+
+    @staticmethod
+    def _copy_page_impl(pools, src, dst):
+        def cp(leaf):
+            # leaves: (n_periods, num_pages, page_size, KV, hd)
+            return leaf.at[:, dst].set(leaf[:, src])
+        return jax.tree_util.tree_map(cp, pools)
+
+    # -- packed-batch views -------------------------------------------------
+    def table_rows(self, slots):
+        """Device block-table rows for the given slots, zero-padded to the
+        packed batch size implied by ``len(slots)`` (-1 slots = pad rows)."""
+        rows = np.zeros((len(slots), self.max_pages_per_seq), np.int32)
+        for i, s in enumerate(slots):
+            if s >= 0:
+                rows[i] = self.block_tables[s]
+        return jnp.asarray(rows)

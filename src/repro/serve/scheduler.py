@@ -1,0 +1,198 @@
+"""Continuous-batching scheduler: admission, chunked prefill, preemption.
+
+The scheduler owns policy, not execution: each ``schedule()`` call returns
+one unit of work — a prefill chunk for one sequence or a batched decode over
+every decoding sequence — and the engine runs it. Shapes stay static (one
+jit trace per work kind) because prefill chunks are a fixed size and decode
+batches are padded to ``max_batch``.
+
+Policy choices (deliberately simple and deterministic; see DESIGN.md §8):
+  * FIFO admission, gated on a whole-sequence capacity check against the
+    page pool (prompt + max_new_tokens must fit) so a lone sequence can
+    never deadlock the pool.
+  * Prefill/decode interleaving alternates when both kinds of work exist,
+    so a stream of long prompts cannot starve running decodes (and vice
+    versa).
+  * Preemption by recompute: when decode needs a page and the pool is dry,
+    the youngest running sequence is evicted — its pages are freed and it
+    re-enters the waiting queue (front) with its generated-so-far tokens
+    appended to the prompt, so greedy output is unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .paged_cache import OutOfPages, PagedKVCache
+
+PREFILL, DECODE, FINISHED = "prefill", "decode", "finished"
+
+
+@dataclasses.dataclass
+class Request:
+    req_id: int
+    prompt: np.ndarray            # (P,) int32
+    max_new_tokens: int
+    eos_id: Optional[int] = None
+
+
+class Sequence:
+    """Scheduler-internal state for one request."""
+
+    def __init__(self, request: Request):
+        self.req = request
+        self.slot = -1
+        self.generated: List[int] = []
+        self.cache_len = 0        # tokens written to the KV pool
+        self.state = PREFILL
+        self.n_preempted = 0
+
+    @property
+    def tokens(self) -> np.ndarray:
+        """Prompt + everything sampled so far (the re-prefill source after a
+        preemption; the last sampled token is not yet in the cache)."""
+        return np.concatenate(
+            [self.req.prompt,
+             np.asarray(self.generated, np.int32)]).astype(np.int32)
+
+    @property
+    def n_total(self):
+        return len(self.req.prompt) + len(self.generated)
+
+    def is_done(self):
+        if len(self.generated) >= self.req.max_new_tokens:
+            return True
+        return (self.req.eos_id is not None and self.generated
+                and self.generated[-1] == self.req.eos_id)
+
+
+class Scheduler:
+    def __init__(self, cache: PagedKVCache, max_batch: int,
+                 prefill_chunk: int):
+        self.cache = cache
+        self.max_batch = max_batch
+        self.prefill_chunk = prefill_chunk
+        self.waiting: Deque[Sequence] = deque()
+        self.running: List[Sequence] = []
+        self._last_was_prefill = False
+        self.n_preemptions = 0
+
+    # -- queue entry points -------------------------------------------------
+    def submit(self, request: Request) -> Sequence:
+        total = len(request.prompt) + request.max_new_tokens
+        if not self.cache.fits(total):
+            raise ValueError(
+                f"request {request.req_id}: {total} tokens can never fit "
+                f"the page pool ({self.cache.num_pages - 1} usable pages x "
+                f"{self.cache.page_size})")
+        seq = Sequence(request)
+        self.waiting.append(seq)
+        return seq
+
+    @property
+    def has_work(self):
+        return bool(self.waiting or self.running)
+
+    # -- internals ----------------------------------------------------------
+    def _admit(self):
+        """FIFO admission while slots, batch room, and pool headroom last.
+        Headroom check is against the *whole* remaining sequence so an
+        admitted sequence only ever blocks on pages another sequence can
+        release (preemption handles that case)."""
+        while (self.waiting and len(self.running) < self.max_batch
+               and self.cache.n_free_slots > 0):
+            seq = self.waiting[0]
+            need = self.cache.pages_for(
+                len(seq.tokens) + seq.req.max_new_tokens
+                - len(seq.generated))
+            if need > self.cache.n_free_pages:
+                break
+            self.waiting.popleft()
+            seq.slot = self.cache.alloc_slot()
+            seq.cache_len = 0
+            seq.state = PREFILL
+            self.running.append(seq)
+
+    def _preempt(self, victim):
+        """Evict ``victim`` (recompute-on-resume): free its pages and push it
+        to the front of the waiting queue with generated tokens preserved."""
+        self.cache.release(victim.slot)
+        victim.slot = -1
+        victim.cache_len = 0
+        victim.state = PREFILL
+        victim.n_preempted += 1
+        self.running.remove(victim)
+        self.waiting.appendleft(victim)
+        self.n_preemptions += 1
+
+    def _reserve_or_preempt(self, seq, n_tokens) -> bool:
+        """Reserve pages for ``seq``, evicting youngest-first until it fits.
+        ``seq`` itself is evicted if it is the youngest (never steal pages
+        from an older sequence); returns False in that case."""
+        while True:
+            try:
+                self.cache.reserve(seq.slot, n_tokens)
+                return True
+            except OutOfPages:
+                victim = max(self.running, key=lambda s: s.req.req_id)
+                self._preempt(victim)
+                if victim is seq:
+                    return False
+
+    def _try_decode(self):
+        decodes = [s for s in self.running if s.state == DECODE]
+        for seq in list(decodes):
+            if seq in self.running:        # a peer's reserve may evict it
+                self._reserve_or_preempt(seq, seq.n_total)
+        decodes = [s for s in decodes if s in self.running]
+        if not decodes:
+            return None
+        self._last_was_prefill = False
+        return ("decode", decodes)
+
+    def _try_prefill(self):
+        prefills = [s for s in self.running if s.state == PREFILL]
+        if not prefills:
+            return None
+        seq = prefills[0]
+        toks = seq.tokens
+        start = seq.cache_len
+        chunk = min(self.prefill_chunk, len(toks) - start)
+        if not self._reserve_or_preempt(seq, start + chunk):
+            return None                    # self-preempted; decode instead
+        self._last_was_prefill = True
+        return ("prefill", seq, toks[start:start + chunk], start)
+
+    # -- the policy ----------------------------------------------------------
+    def schedule(self):
+        """Return the next unit of work, or None when idle:
+          ("prefill", seq, chunk_tokens (C,), start_pos)   — one chunk
+          ("decode", [seqs])                               — packed batch
+
+        Alternates prefill/decode when both exist; whichever kind is tried
+        first, the other is the fallback, so one failed reservation (which
+        preempts the requester) never idles a step that has runnable work.
+        """
+        self._admit()
+        has_decode = any(s.state == DECODE for s in self.running)
+        has_prefill = any(s.state == PREFILL for s in self.running)
+        prefer_decode = has_decode and (not has_prefill
+                                        or self._last_was_prefill)
+        order = (self._try_decode, self._try_prefill)
+        if not prefer_decode:
+            order = order[::-1]
+        for attempt in order:
+            work = attempt()
+            if work is not None:
+                return work
+        return None
+
+    # -- completions ----------------------------------------------------------
+    def finish(self, seq):
+        seq.state = FINISHED
+        self.cache.release(seq.slot)
+        seq.slot = -1
+        self.running.remove(seq)

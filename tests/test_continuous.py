@@ -1,0 +1,144 @@
+"""ContinuousEngine: continuous batching == static-engine greedy decoding."""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import smoke_config
+from repro.core import QuantPolicy, quantize_params
+from repro.models import Model
+from repro.serve import ContinuousEngine, ServeEngine
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = smoke_config("internlm2-1.8b")
+    cfg = dataclasses.replace(cfg, vocab_size=64, vocab_round=64)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    params = jax.tree_util.tree_map(lambda p: p.astype(jnp.float32), params)
+    return model, params
+
+
+@pytest.fixture(scope="module")
+def qsetup(setup):
+    model, params = setup
+    qparams, report = quantize_params(params, QuantPolicy(
+        bits=4, block=64, solver="dp", min_size=1024))
+    assert report
+    return model, qparams
+
+
+def _static_refs(model, params, requests):
+    eng = ServeEngine(model, params, max_seq=64)
+    return [np.asarray(eng.generate(jnp.asarray(p[None]),
+                                    n_tokens=n))[0]
+            for p, n in requests]
+
+
+def _mixed_requests(rng, n):
+    return [(rng.integers(0, 64, (int(rng.integers(3, 14)),))
+             .astype(np.int32), int(rng.integers(2, 10)))
+            for _ in range(n)]
+
+
+def test_eight_concurrent_staggered_token_identical(qsetup, rng):
+    """>= 8 concurrent requests, staggered arrivals, mixed prompt/output
+    lengths: greedy output token-identical to the static engine on the same
+    MSB-quantized model (the acceptance scenario)."""
+    from repro.serve.continuous import _paged_step
+
+    model, qparams = qsetup
+    requests = _mixed_requests(rng, 9)
+    refs = _static_refs(model, qparams, requests)
+    _paged_step._clear_cache()      # the jit cache is shared across engines
+    eng = ContinuousEngine(model, qparams, max_batch=8, page_size=4,
+                           num_pages=64, max_seq=24, prefill_chunk=6)
+    arrivals = [0, 0, 1, 2, 4, 6, 6, 9, 12]
+    done, i, t = {}, 0, 0
+    while i < len(requests) or eng.scheduler.has_work:
+        while i < len(requests) and arrivals[i] <= t:
+            assert eng.submit(*requests[i]) == i
+            i += 1
+        if not eng.step() and i < len(requests):
+            t = arrivals[i]
+            continue
+        done.update(eng.collect())
+        t += 1
+    done.update(eng.collect())
+    assert sorted(done) == list(range(9))
+    for i, ref in enumerate(refs):
+        np.testing.assert_array_equal(done[i], ref)
+    # bucketed shapes: 1 prefill trace + at most log2(max_batch)+1 decode
+    # bucket traces, regardless of request count
+    assert _paged_step._cache_size() <= 5
+
+
+def test_preemption_recompute_token_identical(setup, rng):
+    """A pool too small for both sequences forces eviction + recompute; the
+    greedy outputs are still identical to the static engine."""
+    model, params = setup
+    requests = _mixed_requests(rng, 2)
+    requests = [(r[0][:4], 8) for r in requests]
+    refs = _static_refs(model, params, requests)
+    eng = ContinuousEngine(model, params, max_batch=4, page_size=2,
+                           num_pages=11, prefill_chunk=4)
+    for p, n in requests:
+        eng.submit(p, n)
+    done = eng.run()
+    assert eng.scheduler.n_preemptions > 0, "pool sized to force preemption"
+    for i, ref in enumerate(refs):
+        np.testing.assert_array_equal(done[i], ref)
+    # allocator drains clean
+    c = eng.cache
+    assert c.n_free_pages == c.num_pages - 1
+    assert (c.ref_counts[1:] == 0).all() and c.ref_counts[0] == 1
+
+
+def test_eos_stops_early(setup, rng):
+    model, params = setup
+    prompt = rng.integers(0, 64, (6,)).astype(np.int32)
+    eng0 = ContinuousEngine(model, params, max_batch=2, page_size=4,
+                            num_pages=32, prefill_chunk=8)
+    rid = eng0.submit(prompt, 12)
+    full = eng0.run()[rid]
+    eos = int(full[2])
+    eng1 = ContinuousEngine(model, params, max_batch=2, page_size=4,
+                            num_pages=32, prefill_chunk=8)
+    rid = eng1.submit(prompt, 12, eos_id=eos)
+    out = eng1.run()[rid]
+    assert len(out) == 3 and out[-1] == eos
+
+
+def test_oversized_request_rejected(setup):
+    model, params = setup
+    eng = ContinuousEngine(model, params, max_batch=2, page_size=2,
+                           num_pages=5, prefill_chunk=4)
+    with pytest.raises(ValueError):
+        eng.submit(np.zeros(6, np.int32), 8)   # 14 tokens > 8-token pool
+
+
+def test_non_attention_arch_rejected():
+    cfg = smoke_config("xlstm-125m")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError):
+        ContinuousEngine(model, params)
+
+
+def test_collect_drains_incrementally(setup, rng):
+    model, params = setup
+    eng = ContinuousEngine(model, params, max_batch=4, page_size=4,
+                           num_pages=32, prefill_chunk=8)
+    a = eng.submit(rng.integers(0, 64, (4,)).astype(np.int32), 2)
+    b = eng.submit(rng.integers(0, 64, (4,)).astype(np.int32), 9)
+    seen = {}
+    while eng.scheduler.has_work:
+        eng.step()
+        got = eng.collect()
+        assert not (set(got) & set(seen))      # never delivered twice
+        seen.update(got)
+    assert sorted(seen) == [a, b]
+    assert len(seen[a]) == 2 and len(seen[b]) == 9

@@ -1,0 +1,139 @@
+"""Paged attention (gather-from-block-tables) vs dense attention + kernel."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.models.attention import (decode_attention, flash_attention,
+                                    paged_attention, paged_write)
+from repro.kernels.paged_attention import (paged_attention_decode,
+                                           paged_attention_decode_ref)
+
+
+def _paged_layout(rng, b, s, kv, d, page_size, n_extra_pages=3):
+    """Random K/V laid out into a shuffled page pool + matching block table."""
+    k = rng.standard_normal((b, s, kv, d)).astype(np.float32)
+    v = rng.standard_normal((b, s, kv, d)).astype(np.float32)
+    mp = -(-s // page_size)
+    n_pages = 1 + b * mp + n_extra_pages          # + reserved page 0
+    perm = rng.permutation(np.arange(1, n_pages))  # never page 0
+    k_pool = rng.standard_normal((n_pages, page_size, kv, d)).astype(np.float32)
+    v_pool = rng.standard_normal((n_pages, page_size, kv, d)).astype(np.float32)
+    bt = np.zeros((b, mp), np.int32)
+    for i in range(b):
+        for j in range(mp):
+            page = int(perm[i * mp + j])
+            bt[i, j] = page
+            lo, hi = j * page_size, min((j + 1) * page_size, s)
+            k_pool[page, : hi - lo] = k[i, lo:hi]
+            v_pool[page, : hi - lo] = v[i, lo:hi]
+    return (jnp.asarray(k), jnp.asarray(v), jnp.asarray(k_pool),
+            jnp.asarray(v_pool), jnp.asarray(bt))
+
+
+def test_paged_matches_dense_prefill(rng):
+    """Full-sequence paged attention == causal flash attention <= 1e-5."""
+    b, s, h, kv, d, ps = 2, 24, 4, 2, 16, 8
+    q = jnp.asarray(rng.standard_normal((b, s, h, d)), jnp.float32)
+    k, v, k_pool, v_pool, bt = _paged_layout(rng, b, s, kv, d, ps)
+    ref = flash_attention(q, k, v, causal=True, chunk_q=8, chunk_kv=8)
+    q_pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    out = paged_attention(q, k_pool, v_pool, bt, q_pos,
+                          jnp.full((b,), s, jnp.int32))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+def test_paged_matches_dense_decode(rng):
+    """Single-token paged attention == ring-buffer decode_attention."""
+    b, s, h, kv, d, ps = 3, 20, 4, 2, 16, 4
+    q = jnp.asarray(rng.standard_normal((b, 1, h, d)), jnp.float32)
+    k, v, k_pool, v_pool, bt = _paged_layout(rng, b, s, kv, d, ps)
+    lens = jnp.asarray([s, s - 3, s - 7], jnp.int32)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    ref = decode_attention(q, k, v, positions, lens - 1)
+    out = paged_attention(q, k_pool, v_pool, bt, (lens - 1)[:, None], lens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+def test_paged_window_softcap(rng):
+    b, s, h, kv, d, ps = 2, 16, 4, 2, 16, 4
+    q = jnp.asarray(rng.standard_normal((b, s, h, d)), jnp.float32)
+    k, v, k_pool, v_pool, bt = _paged_layout(rng, b, s, kv, d, ps)
+    ref = flash_attention(q, k, v, causal=True, window=5, softcap=30.0,
+                          chunk_q=8, chunk_kv=8)
+    q_pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    out = paged_attention(q, k_pool, v_pool, bt, q_pos,
+                          jnp.full((b,), s, jnp.int32), window=5, softcap=30.0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+def test_chunked_prefill_equals_full(rng):
+    """Prefilling in chunks through paged attention == one-shot prefill."""
+    b, s, h, kv, d, ps, chunk = 2, 24, 4, 2, 16, 4, 8
+    q = jnp.asarray(rng.standard_normal((b, s, h, d)), jnp.float32)
+    knew = jnp.asarray(rng.standard_normal((b, s, kv, d)), jnp.float32)
+    vnew = jnp.asarray(rng.standard_normal((b, s, kv, d)), jnp.float32)
+    ref = flash_attention(q, knew, vnew, causal=True, chunk_q=8, chunk_kv=8)
+    mp = s // ps
+    n_pages = 1 + b * mp
+    bt = jnp.asarray(
+        np.arange(1, n_pages).reshape(b, mp), jnp.int32)
+    k_pool = jnp.zeros((n_pages, ps, kv, d), jnp.float32)
+    v_pool = jnp.zeros((n_pages, ps, kv, d), jnp.float32)
+    outs = []
+    for c0 in range(0, s, chunk):
+        q_pos = jnp.broadcast_to(
+            jnp.arange(c0, c0 + chunk, dtype=jnp.int32)[None], (b, chunk))
+        k_pool, v_pool = paged_write(k_pool, v_pool,
+                                     knew[:, c0:c0 + chunk],
+                                     vnew[:, c0:c0 + chunk], bt, q_pos)
+        outs.append(paged_attention(q[:, c0:c0 + chunk], k_pool, v_pool, bt,
+                                    q_pos, jnp.full((b,), c0 + chunk,
+                                                    jnp.int32)))
+    out = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+def test_paged_write_pads_to_scratch_page(rng):
+    ps, kv, d = 4, 2, 8
+    k_pool = jnp.zeros((4, ps, kv, d), jnp.float32)
+    v_pool = jnp.zeros((4, ps, kv, d), jnp.float32)
+    bt = jnp.asarray([[1, 2]], jnp.int32)
+    k_new = jnp.ones((1, 3, kv, d), jnp.float32)
+    q_pos = jnp.asarray([[4, -1, -1]], jnp.int32)   # one real, two pads
+    k2, v2 = paged_write(k_pool, v_pool, k_new, k_new, bt, q_pos)
+    assert float(k2[2, 0].sum()) == kv * d           # real write: page 2 slot 0
+    assert float(k2[1].sum()) == 0                   # page 1 untouched
+    assert float(k2[3].sum()) == 0                   # unrelated page untouched
+    assert float(k2[0, 1:].sum()) == 0               # pads land in page 0
+
+
+def test_kernel_interpret_matches_ref(rng):
+    b, h, kv, d, ps, n_pages, mp = 3, 4, 2, 16, 4, 13, 4
+    q = jnp.asarray(rng.standard_normal((b, h, d)), jnp.float32)
+    k_pool = jnp.asarray(rng.standard_normal((n_pages, ps, kv, d)),
+                         jnp.float32)
+    v_pool = jnp.asarray(rng.standard_normal((n_pages, ps, kv, d)),
+                         jnp.float32)
+    bt = jnp.asarray(rng.permutation(np.arange(1, n_pages))[: b * mp]
+                     .reshape(b, mp), jnp.int32)
+    lens = jnp.asarray([16, 9, 3], jnp.int32)
+    out = paged_attention_decode(q, k_pool, v_pool, bt, lens, interpret=True)
+    ref = paged_attention_decode_ref(q, k_pool, v_pool, bt, lens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+def test_kernel_softcap_and_scale(rng):
+    b, h, kv, d, ps, n_pages, mp = 2, 4, 4, 8, 4, 9, 2
+    q = jnp.asarray(rng.standard_normal((b, h, d)), jnp.float32)
+    k_pool = jnp.asarray(rng.standard_normal((n_pages, ps, kv, d)),
+                         jnp.float32)
+    v_pool = jnp.asarray(rng.standard_normal((n_pages, ps, kv, d)),
+                         jnp.float32)
+    bt = jnp.asarray(np.arange(1, 1 + b * mp).reshape(b, mp), jnp.int32)
+    lens = jnp.asarray([7, 8], jnp.int32)
+    out = paged_attention_decode(q, k_pool, v_pool, bt, lens, softcap=20.0,
+                                 scale=0.25, interpret=True)
+    ref = paged_attention_decode_ref(q, k_pool, v_pool, bt, lens,
+                                     softcap=20.0, scale=0.25)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)

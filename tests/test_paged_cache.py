@@ -1,0 +1,118 @@
+"""PagedKVCache allocator: free list, block tables, refcount prefix sharing."""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import smoke_config
+from repro.models import Model
+from repro.serve import OutOfPages, PagedKVCache
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = smoke_config("internlm2-1.8b")
+    cfg = dataclasses.replace(cfg, vocab_size=64, vocab_round=64)
+    return Model(cfg)
+
+
+def make_cache(model, **kw):
+    kw.setdefault("num_pages", 16)
+    kw.setdefault("page_size", 4)
+    kw.setdefault("max_seqs", 4)
+    return PagedKVCache(model, **kw)
+
+
+def test_page0_reserved_and_freelist(model):
+    c = make_cache(model)
+    assert c.n_free_pages == 15          # page 0 never in the free list
+    s = c.alloc_slot()
+    c.reserve(s, 9)                      # ceil(9/4) = 3 pages
+    assert c.n_free_pages == 12
+    assert len(c.seq_pages[s]) == 3
+    assert 0 not in c.seq_pages[s]
+    assert (c.block_tables[s, :3] > 0).all()
+    c.release(s)
+    assert c.n_free_pages == 15
+    assert (c.ref_counts[1:] == 0).all() and c.ref_counts[0] == 1
+
+
+def test_reserve_is_all_or_nothing(model):
+    c = make_cache(model, num_pages=5)   # 4 usable pages
+    s = c.alloc_slot()
+    c.reserve(s, 8)                      # 2 pages
+    free_before = c.n_free_pages
+    with pytest.raises(OutOfPages):
+        c.reserve(s, 100)                # would need 25 pages
+    assert c.n_free_pages == free_before
+    assert len(c.seq_pages[s]) == 2
+
+
+def test_reserve_is_idempotent_and_monotonic(model):
+    c = make_cache(model)
+    s = c.alloc_slot()
+    c.reserve(s, 4)
+    pages = list(c.seq_pages[s])
+    c.reserve(s, 3)                      # shrink request: no-op
+    c.reserve(s, 4)                      # same: no-op
+    assert c.seq_pages[s] == pages
+    c.reserve(s, 5)                      # grow by one page
+    assert c.seq_pages[s][:1] == pages
+
+
+def test_fits_gate(model):
+    c = make_cache(model, num_pages=5, max_pages_per_seq=3)
+    assert c.fits(12)                    # 3 pages, == both limits
+    assert not c.fits(13)                # 4 pages > max_pages_per_seq
+
+
+def test_fork_shares_full_pages_and_copies_partial(model):
+    c = make_cache(model)
+    src = c.alloc_slot()
+    c.reserve(src, 10)                   # 2 full pages + 1 partial (ps=4)
+    c.commit(src, 10)
+    # stamp recognizable data into the pools
+    leaf = jax.tree_util.tree_leaves(c.pools)[0]
+    c.pools = jax.tree_util.tree_map(
+        lambda l: jnp.arange(l.size, dtype=l.dtype).reshape(l.shape), c.pools)
+    free_before = c.n_free_pages
+    dst = c.fork(src)
+    assert dst is not None and dst != src
+    # full pages shared (refcount 2), partial page fresh
+    sp, dp = c.seq_pages[src], c.seq_pages[dst]
+    assert sp[:2] == dp[:2] and sp[2] != dp[2]
+    assert c.ref_counts[sp[0]] == 2 and c.ref_counts[sp[2]] == 1
+    assert c.n_free_pages == free_before - 1
+    assert int(c.seq_lens[dst]) == 10
+    # partial page device-copied
+    for l in jax.tree_util.tree_leaves(c.pools):
+        np.testing.assert_array_equal(np.asarray(l[:, dp[2]]),
+                                      np.asarray(l[:, sp[2]]))
+    # releasing the source keeps shared pages alive for the fork
+    c.release(src)
+    assert c.ref_counts[dp[0]] == 1
+    c.release(dst)
+    assert c.n_free_pages == 15
+
+
+def test_fork_exact_page_boundary_shares_everything(model):
+    c = make_cache(model)
+    src = c.alloc_slot()
+    c.reserve(src, 8)                    # exactly 2 pages
+    c.commit(src, 8)
+    free_before = c.n_free_pages
+    dst = c.fork(src)
+    assert c.seq_pages[dst] == c.seq_pages[src]
+    assert c.n_free_pages == free_before  # nothing copied, nothing allocated
+
+
+def test_table_rows_pads_inactive(model):
+    c = make_cache(model)
+    s = c.alloc_slot()
+    c.reserve(s, 6)
+    rows = np.asarray(c.table_rows([s, -1]))
+    assert rows.shape[0] == 2
+    assert (rows[0][:2] == c.block_tables[s][:2]).all()
+    assert (rows[1] == 0).all()
