@@ -7,9 +7,11 @@ framework policy, and serves the same batched requests from the fp and the
 4-bit engines, reporting agreement + the effective compression. The same
 4-bit model then serves a staggered request stream through the
 continuous-batching engine (paged KV cache, chunked prefill; DESIGN.md §8),
-which must reproduce the static engine's greedy tokens exactly. On TPU the
-Pallas fused dequant-matmul kernel serves the packed int4 codes directly
-(kernels/msb_matmul); this CPU example uses simulation mode.
+which must reproduce the static engine's greedy tokens exactly — here with
+``execution="packed"``: weights rewritten once at load into the kernel
+storage layout (two 4-bit codes per byte; DESIGN.md Sec. 9). On TPU that
+layout feeds the Pallas fused dequant-matmul kernel; on CPU the jnp
+fallback replays simulation math, so tokens stay identical either way.
 """
 import dataclasses
 
@@ -56,7 +58,8 @@ def main():
     # continuous batching: the same 4 requests arrive staggered; outputs
     # must match the static engine's greedy tokens row for row
     ce = ContinuousEngine(model, qparams, max_batch=4, page_size=8,
-                          num_pages=64, max_seq=40, prefill_chunk=8)
+                          num_pages=64, max_seq=40, prefill_chunk=8,
+                          execution="packed")
     arrivals = [0, 2, 4, 6]
     done, i, t = {}, 0, 0
     while i < len(arrivals) or ce.scheduler.has_work:

@@ -20,7 +20,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from .quantize import QTensor, quantize_blockwise, quantize_pertensor, dequantize
+from .quantize import (PackedQTensor, QTensor, dequantize, pack_qtensor,
+                       quantize_blockwise, quantize_pertensor)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -91,24 +92,73 @@ def quantize_params(params, policy: QuantPolicy = QuantPolicy(), verbose=False):
     return tree, report
 
 
-def dequantize_params(params, dtype=None):
-    """Materialize all QTensor leaves back to dense arrays (simulation mode)."""
-    def visit(leaf):
-        if isinstance(leaf, QTensor):
-            w = dequantize(leaf)
-            return w.astype(dtype) if dtype is not None else w
-        return leaf
-    return jax.tree_util.tree_map(
+def pack_params(params, verbose=False):
+    """QTensor leaves -> PackedQTensor (packed execution; DESIGN.md Sec. 9).
+
+    The one-time load pass behind ``execution="packed"``: every 4-bit
+    block-64 ``QTensor`` becomes a kernel-layout ``PackedQTensor`` so no
+    forward ever re-packs. The ``unembed`` table packs *transposed*
+    (k-blocked scales) so the unembedding projection runs through the fused
+    kernel; ``embed`` packs in natural orientation for the row-gather path.
+    Leaves the pass cannot pack (per-tensor QTensors, other bit-widths,
+    plain arrays) stay as-is and keep their simulation-mode execution.
+    Returns (tree, report).
+    """
+    report = {}
+
+    def visit(path, leaf):
+        if not isinstance(leaf, QTensor):
+            return leaf
+        p = _path_str(path)
+        if leaf.bits != 4 or leaf.block != 64:
+            return leaf                      # no packed layout — simulate
+        transpose = p == "unembed" and leaf.codes.ndim == 2
+        pq = pack_qtensor(leaf, transpose=transpose)
+        report[p] = (leaf.shape, "kblocked" if transpose else "nblocked")
+        if verbose:
+            print(f"  packed {p}: {leaf.shape} -> "
+                  f"{'transposed/kblocked' if transpose else 'nblocked'} "
+                  f"uint8 {pq.packed.shape}")
+        return pq
+
+    tree = jax.tree_util.tree_map_with_path(
         visit, params, is_leaf=lambda x: isinstance(x, QTensor))
+    return tree, report
+
+
+def dequantize_params(params, dtype=None):
+    """Materialize all quantized leaves back to dense arrays (simulation mode).
+
+    PackedQTensor leaves come back in their *original* orientation (a
+    transposed unembedding pack is transposed back to ``(V, D)``)."""
+    def visit(leaf):
+        if isinstance(leaf, PackedQTensor):
+            w = leaf.dequantize()
+            if leaf.kblocked:
+                w = w.T
+        elif isinstance(leaf, QTensor):
+            w = dequantize(leaf)
+        else:
+            return leaf
+        return w.astype(dtype) if dtype is not None else w
+    return jax.tree_util.tree_map(
+        visit, params,
+        is_leaf=lambda x: isinstance(x, (QTensor, PackedQTensor)))
 
 
 def param_bits(params):
-    """Total storage bits of a (possibly mixed) params tree."""
+    """Total storage bits of a (possibly mixed) params tree.
+
+    PackedQTensor leaves report their real allocated footprint: uint8
+    packed codes (8 bits/byte) + the scale table, N-padding included."""
     total = 0
 
     def visit(leaf):
         nonlocal total
-        if isinstance(leaf, QTensor):
+        if isinstance(leaf, PackedQTensor):
+            scale_bits = jnp.dtype(leaf.scales.dtype).itemsize * 8
+            total += leaf.packed.size * 8 + leaf.scales.size * scale_bits
+        elif isinstance(leaf, QTensor):
             scale_bits = jnp.dtype(leaf.scales.dtype).itemsize * 8
             total += leaf.codes.size * leaf.bits + leaf.scales.size * scale_bits
         elif hasattr(leaf, "size"):
@@ -116,5 +166,6 @@ def param_bits(params):
         return leaf
 
     jax.tree_util.tree_map(visit, params,
-                           is_leaf=lambda x: isinstance(x, QTensor))
+                           is_leaf=lambda x: isinstance(x, (QTensor,
+                                                            PackedQTensor)))
     return total

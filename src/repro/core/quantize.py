@@ -189,6 +189,172 @@ def unpack_codes_int4(packed, shape):
 
 
 # ---------------------------------------------------------------------------
+# Packed execution format (deployment path; DESIGN.md Sec. 9)
+# ---------------------------------------------------------------------------
+
+PACK_BLOCK = 64      # MSB block size — matches kernels/msb_matmul BLOCK
+PACK_LEVELS = 8      # 2^(4-1) codebook entries per block
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class PackedQTensor:
+    """Kernel-layout MSB tensor: 4-bit codes two-per-byte + 3-D codebooks.
+
+    Storage is in *matmul orientation* ``(..., K, N)``: ``y = x @ dequant``.
+    The last dim is padded to a multiple of ``PACK_BLOCK`` at pack time
+    (``n`` keeps the logical width; padded columns carry zero scales and
+    dequantize to exact 0, so the matmul wrapper just slices them off).
+
+    Two scale layouts, both one codebook row per 64-element block:
+      * n-blocked (default): blocks run along N — ``scales`` is
+        ``(..., K, N_pad // 64, 8)``. This is every dense (in, out) weight.
+      * k-blocked (``kblocked=True``): blocks run along K — ``scales`` is
+        ``(..., K // 64, N_pad, 8)``. Produced by ``transpose=True`` packing
+        of a ``(V, D)`` table so the unembedding projection
+        ``x (B, D) @ table^T (D, V)`` hits the fused kernel without
+        re-quantizing: the original block-along-D grouping *is* the
+        block-along-K grouping of the transposed operand.
+
+    Like ``QTensor`` it is a pytree (packed/scales leaves; bits/block/dtype/
+    n/kblocked static), so stacked scan-over-layers params slice cleanly and
+    the static aux never retraces.
+    """
+    packed: jax.Array         # uint8 (..., K, N_pad // 2)
+    scales: jax.Array         # see class docstring
+    bits: int
+    block: int
+    dtype: object
+    n: int                    # logical N before padding
+    kblocked: bool = False
+
+    @property
+    def shape(self):
+        return self.packed.shape[:-1] + (self.n,)
+
+    @property
+    def n_pad(self):
+        return self.packed.shape[-1] * 2
+
+    def tree_flatten(self):
+        return ((self.packed, self.scales),
+                (self.bits, self.block, self.dtype, self.n, self.kblocked))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        packed, scales = children
+        bits, block, dtype, n, kblocked = aux
+        return cls(packed, scales, bits, block, dtype, n, kblocked)
+
+    def dequantize(self):
+        return packed_dequantize(self)
+
+
+def _pad_last(a, to):
+    pad = (-a.shape[-1]) % to
+    if not pad:
+        return a
+    widths = [(0, 0)] * (a.ndim - 1) + [(0, pad)]
+    return jnp.pad(a, widths)
+
+
+def pack_qtensor(q: QTensor, *, transpose=False) -> PackedQTensor:
+    """QTensor -> kernel storage layout, once at load time.
+
+    ``transpose=True`` packs a 2-D ``(V, D)`` table as its transpose
+    ``(D, V)`` with k-blocked scales (unembedding orientation). Requires
+    4-bit block-64 quantization; N not divisible by the block is padded
+    with zero-scale columns.
+    """
+    if q.bits != 4 or q.block != PACK_BLOCK:
+        raise ValueError(f"packing needs 4-bit block-{PACK_BLOCK} "
+                         f"quantization, got {q.bits}-bit block {q.block}")
+    codes, scales = q.codes, q.scales
+    if transpose:
+        if codes.ndim != 2:
+            raise ValueError("transpose packing is for 2-D tables")
+        v, d = codes.shape
+        codes = codes.T                                     # (D, V)
+        n = v
+        codes = _pad_last(codes, PACK_BLOCK)
+        # (V, D//64, 8) -> (D//64, V, 8), pad V with zero-scale columns
+        scales = jnp.moveaxis(scales, 0, 1)
+        pad = codes.shape[-1] - v
+        if pad:
+            scales = jnp.pad(scales, ((0, 0), (0, pad), (0, 0)))
+    else:
+        n = codes.shape[-1]
+        codes = _pad_last(codes, PACK_BLOCK)
+        pad_blocks = (codes.shape[-1] - n) // PACK_BLOCK
+        if pad_blocks:
+            widths = [(0, 0)] * (scales.ndim - 2) + [(0, pad_blocks), (0, 0)]
+            scales = jnp.pad(scales, widths)
+    n_pad = codes.shape[-1]
+    packed = pack_codes_int4(codes).reshape(*codes.shape[:-1], n_pad // 2)
+    return PackedQTensor(packed, scales, q.bits, q.block, q.dtype, n,
+                         kblocked=transpose)
+
+
+def _unpack_nibbles(packed):
+    """uint8 (..., half) -> (level int32, sign f32), both (..., 2*half)."""
+    p32 = packed.astype(jnp.int32)
+    lo = p32 & 0xF
+    hi = (p32 >> 4) & 0xF
+    nib = jnp.stack([lo, hi], axis=-1).reshape(*packed.shape[:-1],
+                                               packed.shape[-1] * 2)
+    level = nib & 0x7
+    sign = (1 - 2 * ((nib >> 3) & 1)).astype(jnp.float32)
+    return level, sign
+
+
+def packed_dequantize(pq: PackedQTensor):
+    """Dense weights in matmul orientation ``(..., K, n)``.
+
+    jnp fallback for backends without the fused kernel; mirrors the exact
+    f32 take-along-axis math of ``dequantize`` so packed and simulated
+    execution agree bit-for-bit (up to the packed-zero caveat, DESIGN.md
+    Sec. 7).
+    """
+    level, sign = _unpack_nibbles(pq.packed)       # (..., K, N_pad)
+    n_pad = level.shape[-1]
+    sc = pq.scales.astype(jnp.float32)
+    if pq.kblocked:
+        # sc (..., K//64, N_pad, 8): block index = k // 64. Gather per
+        # (k-block, n) with levels brought to (..., K//64, N_pad, 64).
+        k = level.shape[-2]
+        lv = level.reshape(*level.shape[:-2], k // PACK_BLOCK, PACK_BLOCK,
+                           n_pad)
+        lvb = jnp.moveaxis(lv, -2, -1)             # (..., K//64, N_pad, 64)
+        magb = jnp.take_along_axis(sc, lvb, axis=-1)
+        mag = jnp.moveaxis(magb, -1, -2).reshape(*level.shape)
+    else:
+        # sc (..., K, N_pad//64, 8): block index = n // 64
+        lv = level.reshape(*level.shape[:-1], n_pad // PACK_BLOCK, PACK_BLOCK)
+        mag = jnp.take_along_axis(sc, lv, axis=-1).reshape(*level.shape)
+    w = sign * mag
+    return w[..., : pq.n].astype(pq.dtype)
+
+
+def packed_gather(pq: PackedQTensor, idx):
+    """Rows ``idx`` of a natural-orientation packed table, dequantized.
+
+    The packed-weight analogue of ``dequantize(q)[idx]``: unpacks and
+    dequantizes *only the gathered rows*, so the embedding lookup never
+    materializes the full bf16 table (the old simulation path did, every
+    step)."""
+    if pq.kblocked:
+        raise ValueError("packed_gather needs natural (n-blocked) layout")
+    rows = jnp.take(pq.packed, idx, axis=0)        # (..., N_pad//2)
+    srow = jnp.take(pq.scales, idx, axis=0)        # (..., N_pad//64, 8)
+    level, sign = _unpack_nibbles(rows)
+    n_pad = level.shape[-1]
+    lv = level.reshape(*level.shape[:-1], n_pad // PACK_BLOCK, PACK_BLOCK)
+    mag = jnp.take_along_axis(srow.astype(jnp.float32), lv,
+                              axis=-1).reshape(*level.shape)
+    return (sign * mag)[..., : pq.n].astype(pq.dtype)
+
+
+# ---------------------------------------------------------------------------
 # Double quantization (paper Appendix G)
 # ---------------------------------------------------------------------------
 
@@ -221,13 +387,21 @@ def double_quantize(q: QTensor, bits=6, block=2048, solver="kmeans"):
 # Storage accounting (paper Sec. 4.1)
 # ---------------------------------------------------------------------------
 
-def storage_bits_per_weight(q: QTensor, double_quant=False,
+def storage_bits_per_weight(q, double_quant=False,
                             scale_bits=16, dq_bits=6, dq_block=2048):
     """Effective bits/weight incl. codebook metadata.
 
     4-bit block-64, bf16 scales: 4 + 8*16/64 = 6.00 (paper).  With DQ:
     4 + 8*(6 + 32*16/2048)/64 = 4.78 (paper App. G). Per-tensor: ~b bits.
+
+    For a ``PackedQTensor`` the answer is the *real allocated footprint*
+    (uint8 codes + scale table, incl. any N-padding) over the logical
+    element count — what HBM actually holds, not the formula.
     """
+    if isinstance(q, PackedQTensor):
+        n = float(np.prod(q.shape))
+        scale_bits = jnp.dtype(q.scales.dtype).itemsize * 8
+        return (q.packed.size * 8 + q.scales.size * scale_bits) / n
     n = float(np.prod(q.shape))
     if q.block == -1:
         return q.bits + q.n_levels * scale_bits / n

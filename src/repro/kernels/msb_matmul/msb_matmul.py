@@ -1,17 +1,27 @@
 """Pallas TPU kernel: fused MSB-dequantize + matmul.
 
-Computes ``y = x @ dequant(Wq)`` where Wq is 4-bit MSB weight storage:
+Computes ``y = x @ dequant(Wq) (+ bias)`` where Wq is 4-bit MSB weight
+storage:
   packed : uint8 (K, N//2) — two 4-bit codes per byte
            nibble = (sign_bit << 3) | level,  level in [0, 8)
-  scales : bf16/f32 (K, N//64, 8) — one 8-level codebook per 64-element
-           row-block (the paper's block-wise granularity)
+  scales : bf16/f32, one 8-level codebook per 64-element block:
+             n-blocked (dense weights): (K, N//64, 8) — blocks along N
+             k-blocked (transposed unembedding): (K//64, N, 8) — blocks
+             along K (``kblocked=True``)
 
-TPU mapping (DESIGN.md Sec. 2): the kernel streams x tiles (bm, bk) and
+TPU mapping (DESIGN.md Sec. 9): the kernel streams x tiles (bm, bk) and
 packed-code tiles (bk, bn//2) HBM->VMEM, unpacks + dequantizes in VMEM
 registers (3 bit-ops + an 8-way select — no gather), and feeds the MXU with
 (bm, bk) x (bk, bn) bf16 tiles, accumulating f32 into the output tile. The
-weight HBM traffic is 6 bits/weight (codes + codebooks) instead of 16 —
-the decode-shape memory-roofline win measured in EXPERIMENTS.md §Perf.
+weight HBM traffic is ~6 bits/weight (codes + codebooks) instead of 16 —
+the decode-shape memory-roofline win tracked in BENCH_matmul.json.
+
+Serving shapes: tile sizes default to a (M, K, N)-keyed heuristic —
+bucketed decode (M <= 8) takes a skinny-M/GEMV specialization (one
+sublane-high x row tile, wide bn so the packed weight stream dominates
+traffic); M is padded to the tile height inside this wrapper, so any
+decode bucket shape works. An optional bias (1, N) is added to the output
+tile on the last K step (fused — no separate bias pass over HBM).
 
 Grid: (M/bm, N/bn, K/bk), K innermost for output-tile accumulation.
 """
@@ -23,21 +33,12 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-BLOCK = 64     # MSB block size along N
+BLOCK = 64     # MSB block size along the quantization axis
 LEVELS = 8     # 2^(4-1) scales per block
 
 
-def _kernel(x_ref, packed_ref, scales_ref, o_ref, *, bk_steps, dot_dtype):
-    k_step = pl.program_id(2)
-
-    @pl.when(k_step == 0)
-    def _init():
-        o_ref[...] = jnp.zeros_like(o_ref)
-
-    x = x_ref[...]                               # (bm, bk)
-    packed = packed_ref[...]                     # (bk, bn//2) uint8
-    scales = scales_ref[...]                     # (bk, bn//64, 8)
-
+def _dequant_tile(packed, scales, *, kblocked, dot_dtype):
+    """uint8 (bk, bn//2) + codebook tile -> bf16/f32 (bk, bn) weights."""
     bk, half = packed.shape
     bn = half * 2
     p32 = packed.astype(jnp.int32)
@@ -48,45 +49,122 @@ def _kernel(x_ref, packed_ref, scales_ref, o_ref, *, bk_steps, dot_dtype):
     sign = (1 - 2 * ((nib >> 3) & 1)).astype(jnp.float32)
 
     # 8-way select instead of a gather: w = sum_z [level == z] * scales[.., z]
-    sc = scales.astype(jnp.float32)              # (bk, bn//64, 8)
+    sc = scales.astype(jnp.float32)
     mag = jnp.zeros((bk, bn), jnp.float32)
     for z in range(LEVELS):
-        sz = jnp.repeat(sc[:, :, z], BLOCK, axis=1)   # (bk, bn)
+        if kblocked:                             # sc (bk//64, bn, 8)
+            sz = jnp.repeat(sc[:, :, z], BLOCK, axis=0)       # (bk, bn)
+        else:                                    # sc (bk, bn//64, 8)
+            sz = jnp.repeat(sc[:, :, z], BLOCK, axis=1)       # (bk, bn)
         mag = mag + jnp.where(level == z, sz, 0.0)
-    w = (sign * mag).astype(dot_dtype)
+    return (sign * mag).astype(dot_dtype)
 
-    acc = jnp.dot(x.astype(dot_dtype), w,
+
+def _kernel(x_ref, packed_ref, scales_ref, o_ref, *, bk_steps, dot_dtype,
+            kblocked):
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    w = _dequant_tile(packed_ref[...], scales_ref[...],
+                      kblocked=kblocked, dot_dtype=dot_dtype)
+    acc = jnp.dot(x_ref[...].astype(dot_dtype), w,
                   preferred_element_type=jnp.float32)
     o_ref[...] += acc
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
-def msb_matmul(x, packed, scales, *, bm=128, bn=256, bk=128, interpret=False):
-    """x: (M, K); packed: (K, N//2) uint8; scales: (K, N//64, 8).
+def _kernel_bias(x_ref, packed_ref, scales_ref, bias_ref, o_ref, *,
+                 bk_steps, dot_dtype, kblocked):
+    _kernel(x_ref, packed_ref, scales_ref, o_ref, bk_steps=bk_steps,
+            dot_dtype=dot_dtype, kblocked=kblocked)
 
-    Returns (M, N) in x.dtype. Tile sizes are MXU-aligned multiples of 128;
-    bn must be a multiple of 64 (the MSB block).
+    @pl.when(pl.program_id(2) == bk_steps - 1)
+    def _add_bias():
+        o_ref[...] += bias_ref[...].astype(jnp.float32)
+
+
+def _largest_divisor(x, candidates):
+    for c in candidates:
+        if x % c == 0:
+            return c
+    return x
+
+
+def pick_blocks(m, k, n):
+    """(bm, bn, bk) heuristic keyed on the problem shape.
+
+    Decode (M <= 8) is pure weight streaming: one sublane-high output tile,
+    bn as wide as divisibility allows (amortizes the per-tile dequant and
+    keeps the packed-code DMA long), deep bk. Prefill/training shapes use
+    MXU-square 128s. All sizes divide their dim — callers pad M only."""
+    if m <= 8:
+        bm = 8
+        bn = _largest_divisor(n, (512, 256, 128, 64))
+        # bk capped at 256 so the in-register dequant tile (bk, bn) and its
+        # unpack intermediates stay a small fraction of VMEM at bn=512
+        bk = _largest_divisor(k, (256, 128, 64, 32, 16, 8))
+    else:
+        bm = _largest_divisor(m, (128, 64, 32, 16, 8))
+        bn = _largest_divisor(n, (256, 128, 64))
+        bk = _largest_divisor(k, (256, 128, 64, 32, 16, 8))
+    return bm, bn, bk
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "kblocked",
+                                             "interpret"))
+def msb_matmul(x, packed, scales, bias=None, *, bm=None, bn=None, bk=None,
+               kblocked=False, interpret=False):
+    """x: (M, K); packed: (K, N//2) uint8; scales: (K, N//64, 8) n-blocked
+    or (K//64, N, 8) k-blocked; bias: optional (N,) or (1, N).
+
+    Returns (M, N) in x.dtype. Tile sizes must be multiples of the MSB
+    block along the blocked axis; unset sizes come from ``pick_blocks``.
+    M is padded to the tile height internally (serving buckets are 1..8).
     """
     m, k = x.shape
     n = packed.shape[1] * 2
-    bm = min(bm, m)
-    bn = min(bn, n)
-    bk = min(bk, k)
-    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
+    hm, hn, hk = pick_blocks(m, k, n)
+    bm = hm if bm is None else bm
+    bn = hn if bn is None else min(bn, n)
+    bk = hk if bk is None else min(bk, k)
+    if m % bm:
+        x = jnp.pad(x, ((0, -m % bm), (0, 0)))
+    mp = x.shape[0]
+    assert mp % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
     assert bn % BLOCK == 0
+    if kblocked:
+        assert bk % BLOCK == 0, (bk, "k-blocked scales need 64-aligned bk")
     dot_dtype = x.dtype if x.dtype in (jnp.bfloat16, jnp.float32) else jnp.float32
 
-    grid = (m // bm, n // bn, k // bk)
+    grid = (mp // bm, n // bn, k // bk)
+    scales_spec = (
+        pl.BlockSpec((bk // BLOCK, bn, LEVELS), lambda i, j, s: (s, j, 0))
+        if kblocked else
+        pl.BlockSpec((bk, bn // BLOCK, LEVELS), lambda i, j, s: (s, j, 0)))
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, s: (i, s)),
+        pl.BlockSpec((bk, bn // 2), lambda i, j, s: (s, j)),
+        scales_spec,
+    ]
+    args = [x, packed, scales]
+    if bias is not None:
+        bias = bias.reshape(-1)
+        if bias.shape[0] != n:    # logical N < padded storage width
+            bias = jnp.pad(bias, (0, n - bias.shape[0]))
+        in_specs.append(pl.BlockSpec((1, bn), lambda i, j, s: (0, j)))
+        args.append(bias.reshape(1, n))
+        kern = _kernel_bias
+    else:
+        kern = _kernel
     out = pl.pallas_call(
-        functools.partial(_kernel, bk_steps=grid[2], dot_dtype=dot_dtype),
+        functools.partial(kern, bk_steps=grid[2], dot_dtype=dot_dtype,
+                          kblocked=kblocked),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, s: (i, s)),
-            pl.BlockSpec((bk, bn // 2), lambda i, j, s: (s, j)),
-            pl.BlockSpec((bk, bn // BLOCK, LEVELS), lambda i, j, s: (s, j, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((mp, n), jnp.float32),
         interpret=interpret,
-    )(x, packed, scales)
-    return out.astype(x.dtype)
+    )(*args)
+    return out[:m].astype(x.dtype)

@@ -1,19 +1,60 @@
-"""jit'd wrapper: QTensor -> kernel storage layout + dispatch.
+"""Dispatch layer: packed-weight matmul for models and serving.
 
-``qtensor_matmul(x, q)`` runs the Pallas kernel on TPU (or interpret mode on
-CPU for validation) and the jnp reference elsewhere. ``to_kernel_layout``
-converts the framework QTensor (codes int8 + (n_blocks, 8) scales) into the
-kernel's packed/reshaped layout once at load time.
+``packed_matmul(x, pq)`` is the hot-path entry point: its input is a
+pre-packed ``PackedQTensor`` (produced once at load time by
+``core.policy.pack_params``), so nothing is re-laid-out per call. On TPU it
+runs the fused Pallas kernel; elsewhere it mirrors simulation-mode math
+exactly (dequantize, then the same einsum ``dense()`` uses) so packed and
+simulated execution are token-identical off-TPU by construction.
+
+``qtensor_matmul`` / ``to_kernel_layout`` remain as test/bench conveniences
+over the raw ``QTensor``; the packing they do is memoized on the concrete
+codes/scales buffers, fixing the old per-invocation ``to_kernel_layout``
+(int4 pack + scale reshape on every call).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from ...core.quantize import QTensor, pack_codes_int4
+from ...core.quantize import (PackedQTensor, QTensor, pack_codes_int4,
+                              pack_qtensor)
 from .msb_matmul import BLOCK, LEVELS, msb_matmul
 from .ref import msb_matmul_ref
 
+
+def _on_tpu():
+    return jax.default_backend() == "tpu"
+
+
+def packed_matmul(x, pq: PackedQTensor, bias=None, *, use_kernel=None,
+                  interpret=None):
+    """y = x @ dequant(pq) (+ bias). x: (..., K); returns (..., pq.n).
+
+    ``pq`` must be 2-D storage (a scan-sliced or per-expert leaf). The
+    kernel path fuses the bias add; the jnp path replays simulation-mode
+    math on the dequantized weights."""
+    if pq.packed.ndim != 2:
+        raise ValueError(f"packed_matmul wants 2-D storage, got "
+                         f"{pq.packed.shape}; slice stacked params first")
+    if use_kernel is None:
+        use_kernel = _on_tpu()
+    if use_kernel:
+        if interpret is None:
+            interpret = not _on_tpu()
+        lead = x.shape[:-1]
+        x2 = x.reshape(-1, x.shape[-1])
+        y = msb_matmul(x2, pq.packed, pq.scales, bias,
+                       kblocked=pq.kblocked, interpret=interpret)
+        return y[:, : pq.n].reshape(*lead, pq.n).astype(x.dtype)
+    w = pq.dequantize()                      # (K, n), exact simulation math
+    y = jnp.einsum("...d,df->...f", x, w.astype(x.dtype))
+    if bias is not None:
+        y = y + bias.astype(y.dtype)
+    return y
+
+
+# -- QTensor conveniences (tests / benchmarks) -------------------------------
 
 def to_kernel_layout(q: QTensor):
     """QTensor (codes (K,N), scales (K*N/64, 8)) -> (packed, scales3d)."""
@@ -24,17 +65,26 @@ def to_kernel_layout(q: QTensor):
     return packed, scales
 
 
+_PACK_CACHE = {}
+
+
+def _cached_pack(q: QTensor) -> PackedQTensor:
+    """Memoize packing on the concrete buffers so repeated calls don't
+    re-run the layout pass. Tracers (inside jit) are never cached — models
+    should carry PackedQTensor params instead of packing under trace."""
+    if isinstance(q.codes, jax.core.Tracer):
+        return pack_qtensor(q)
+    key = (id(q.codes), id(q.scales))
+    hit = _PACK_CACHE.get(key)
+    if hit is None or hit[0] is not q.codes:
+        if len(_PACK_CACHE) > 256:
+            _PACK_CACHE.clear()
+        hit = (q.codes, pack_qtensor(q))
+        _PACK_CACHE[key] = hit
+    return hit[1]
+
+
 def qtensor_matmul(x, q: QTensor, *, use_kernel=None, interpret=None):
-    """y = x @ dequant(q). x: (..., K)."""
-    packed, scales = to_kernel_layout(q)
-    lead = x.shape[:-1]
-    x2 = x.reshape(-1, x.shape[-1])
-    if use_kernel is None:
-        use_kernel = jax.default_backend() == "tpu"
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
-    if use_kernel:
-        y = msb_matmul(x2, packed, scales, interpret=interpret)
-    else:
-        y = msb_matmul_ref(x2, packed, scales)
-    return y.reshape(*lead, -1)
+    """y = x @ dequant(q). x: (..., K). Packs on first use (memoized)."""
+    return packed_matmul(x, _cached_pack(q), use_kernel=use_kernel,
+                         interpret=interpret)

@@ -1,35 +1,39 @@
-"""Pure-jnp oracle for the msb_matmul kernel."""
+"""Pure-jnp oracle for the msb_matmul kernel.
+
+The nibble decode and per-block scale gather are the *same* code the
+packed execution path runs off-TPU (core.quantize), so the oracle cannot
+drift from the storage format — only the in-kernel 8-way-select variant
+(msb_matmul._dequant_tile) is a separate implementation, and it is what
+these functions validate.
+"""
 from __future__ import annotations
 
 import jax.numpy as jnp
 
-BLOCK = 64
-LEVELS = 8
+from ...core.quantize import (PACK_BLOCK as BLOCK, PACK_LEVELS as LEVELS,
+                              PackedQTensor, _unpack_nibbles,
+                              packed_dequantize)
 
 
 def unpack_ref(packed, n):
     """uint8 (K, N//2) -> (level (K,N) int32, sign (K,N) f32)."""
-    p32 = packed.astype(jnp.int32)
-    lo = p32 & 0xF
-    hi = (p32 >> 4) & 0xF
-    nib = jnp.stack([lo, hi], axis=-1).reshape(packed.shape[0], n)
-    level = nib & 0x7
-    sign = (1 - 2 * ((nib >> 3) & 1)).astype(jnp.float32)
-    return level, sign
+    level, sign = _unpack_nibbles(packed)
+    return level[:, :n], sign[:, :n]
 
 
-def dequant_ref(packed, scales):
-    """Dequantize to (K, N) f32. scales: (K, N//64, 8)."""
-    k, half = packed.shape
-    n = half * 2
-    level, sign = unpack_ref(packed, n)
-    sc = scales.astype(jnp.float32)                          # (K, N//64, 8)
-    mag = jnp.take_along_axis(
-        sc, level.reshape(k, n // BLOCK, BLOCK), axis=2
-    ).reshape(k, n)
-    return sign * mag
+def dequant_ref(packed, scales, kblocked=False):
+    """Dequantize to (K, N) f32.
+
+    scales: (K, N//64, 8) n-blocked, or (K//64, N, 8) k-blocked."""
+    n = packed.shape[-1] * 2
+    pq = PackedQTensor(packed, scales, 4, BLOCK, jnp.float32, n,
+                       kblocked=kblocked)
+    return packed_dequantize(pq)
 
 
-def msb_matmul_ref(x, packed, scales):
-    w = dequant_ref(packed, scales).astype(x.dtype)
-    return jnp.dot(x, w, preferred_element_type=jnp.float32).astype(x.dtype)
+def msb_matmul_ref(x, packed, scales, bias=None, kblocked=False):
+    w = dequant_ref(packed, scales, kblocked=kblocked).astype(x.dtype)
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    if bias is not None:
+        y = y + bias.reshape(1, -1).astype(y.dtype)
+    return y.astype(x.dtype)

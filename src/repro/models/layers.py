@@ -38,7 +38,10 @@ def rope(x, positions, theta=10000.0):
 
 
 def dense(x, w, b=None):
-    from ..core.quantize import QTensor
+    from ..core.quantize import PackedQTensor, QTensor
+    if isinstance(w, PackedQTensor):  # packed execution: fused kernel on TPU
+        from ..kernels.msb_matmul.ops import packed_matmul
+        return packed_matmul(x, w, bias=b)
     if isinstance(w, QTensor):      # MSB-quantized serving (simulation mode)
         w = w.dequantize()
     y = jnp.einsum("...d,df->...f", x, w.astype(x.dtype))

@@ -51,17 +51,25 @@ class Model:
 
     # -- shared pieces -----------------------------------------------------
     def _embed(self, params, tokens):
-        from ..core.quantize import QTensor
+        from ..core.quantize import PackedQTensor, QTensor, packed_gather
         cfg = self.cfg
         table = params["embed"]
+        if isinstance(table, PackedQTensor):
+            # packed execution: unpack + dequantize only the gathered rows —
+            # the full bf16 table never materializes (DESIGN.md Sec. 9)
+            e = packed_gather(table, tokens).astype(cfg.dtype)
+            return e * jnp.asarray(cfg.embed_scale, cfg.dtype)
         if isinstance(table, QTensor):   # quantize-on-load serving
             table = table.dequantize()
         e = jnp.take(table, tokens, axis=0).astype(cfg.dtype)
         return e * jnp.asarray(cfg.embed_scale, cfg.dtype)
 
     def _unembed_vd(self, params):
-        from ..core.quantize import QTensor
+        from ..core.quantize import PackedQTensor, QTensor
         table = params.get("unembed", params["embed"])
+        if isinstance(table, PackedQTensor):
+            w = table.dequantize()       # matmul orientation (K, n)
+            return w.T if table.kblocked else w
         if isinstance(table, QTensor):
             table = table.dequantize()
         return table
@@ -114,9 +122,20 @@ class Model:
 
     # -- serving -----------------------------------------------------------
     def _logits(self, params, hidden):
+        from ..core.quantize import PackedQTensor
         cfg = self.cfg
-        logits = jnp.einsum("bd,vd->bv", hidden.astype(jnp.float32),
-                            self._unembed_vd(params).astype(jnp.float32))
+        table = params.get("unembed", params["embed"])
+        if (isinstance(table, PackedQTensor) and table.kblocked
+                and jax.default_backend() == "tpu"):
+            # fused unembedding projection: hidden (B, D) @ table^T (D, V)
+            # streams 4-bit codes through the kernel. Off-TPU the fallback
+            # below replays the exact simulation einsum so packed and
+            # simulated greedy decode stay token-identical.
+            from ..kernels.msb_matmul.ops import packed_matmul
+            logits = packed_matmul(hidden.astype(jnp.float32), table)
+        else:
+            logits = jnp.einsum("bd,vd->bv", hidden.astype(jnp.float32),
+                                self._unembed_vd(params).astype(jnp.float32))
         if cfg.logit_softcap > 0:
             logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
         vp = logits.shape[-1]

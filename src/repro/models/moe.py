@@ -57,6 +57,41 @@ def _route(x2d, router_w, e_total, n_real, k, capacity):
     return gates, eidx, pos, keep, aux
 
 
+def _expert_ffn_quantized(xe, wg, wi, wo, counts):
+    """Quantized-expert FFN: one expert at a time, router-gated.
+
+    The old path dequantized all three (E, D, F) expert tensors eagerly on
+    every call — full bf16 materialization even for experts the router
+    never selected. Here ``lax.map`` streams one expert's weights at a
+    time (dequantize / packed-dispatch just that slice) and ``lax.cond``
+    on the router count skips the matmuls entirely for experts with no
+    routed tokens — at decode (1 token, k of E experts active) most
+    experts take the zero branch.
+    """
+    from ..core.quantize import PackedQTensor, QTensor
+    from ..kernels.msb_matmul.ops import packed_matmul
+
+    def mm(xc, w):
+        if isinstance(w, PackedQTensor):
+            return packed_matmul(xc, w)
+        if isinstance(w, QTensor):
+            w = w.dequantize()
+        return jnp.einsum("cd,df->cf", xc, w.astype(xc.dtype))
+
+    def one(args):
+        xc, g_, i_, o_, cnt = args
+
+        def compute(xc):
+            g = mm(xc, g_)
+            u = mm(xc, i_)
+            h = jax.nn.silu(g.astype(jnp.float32)).astype(xc.dtype) * u
+            return mm(h, o_)
+
+        return jax.lax.cond(cnt > 0, compute, jnp.zeros_like, xc)
+
+    return jax.lax.map(one, (xe, wg, wi, wo, counts))
+
+
 def _expert_ffn(xe, wg, wi, wo, chunk=2048):
     """xe: (E_loc, C, D); weights (E_loc, D, F) / (E_loc, F, D).
 
@@ -102,10 +137,8 @@ def _combine(ye_flat, flat_slot, gates, keep, t, k, d):
 
 def moe_layer(p, x, cfg, parallel=None):
     """x: (B, S, D) -> (B, S, D). ``parallel`` = ParallelContext or None."""
-    from ..core.quantize import QTensor
-    if isinstance(p.get("wg"), QTensor):  # MSB-quantized serving (simulation)
-        p = dict(p, wg=p["wg"].dequantize(), wi=p["wi"].dequantize(),
-                 wo=p["wo"].dequantize())
+    from ..core.quantize import PackedQTensor, QTensor
+    quantized = isinstance(p.get("wg"), (QTensor, PackedQTensor))
     b, s, d = x.shape
     k = cfg.n_experts_active
     e_total = cfg.n_experts_padded
@@ -120,10 +153,19 @@ def moe_layer(p, x, cfg, parallel=None):
             x.reshape(-1, d), p["router"], e_total, n_real, k, capacity)
         buf, flat_slot = _dispatch(x.reshape(-1, d), gates, eidx, pos, keep,
                                    e_total, capacity)
-        ye = _expert_ffn(buf[:-1].reshape(e_total, capacity, d),
-                         p["wg"], p["wi"], p["wo"])
+        xe = buf[:-1].reshape(e_total, capacity, d)
+        if quantized:
+            counts = jnp.zeros((e_total,), jnp.int32).at[
+                eidx.reshape(-1)].add(keep.reshape(-1).astype(jnp.int32))
+            ye = _expert_ffn_quantized(xe, p["wg"], p["wi"], p["wo"], counts)
+        else:
+            ye = _expert_ffn(xe, p["wg"], p["wi"], p["wo"])
         y = _combine(ye.reshape(-1, d), flat_slot, gates, keep, b * s, k, d)
         return y.reshape(b, s, d), aux
+
+    if quantized:    # EP collectives need dense bf16 expert weights
+        p = dict(p, wg=p["wg"].dequantize(), wi=p["wi"].dequantize(),
+                 wo=p["wo"].dequantize())
 
     mesh = parallel.mesh
     tp = parallel.tp_size

@@ -54,8 +54,12 @@ class ContinuousEngine:
     max_pages_per_seq: Optional[int] = None
     prefill_chunk: int = 32
     parallel: object = None
+    execution: Optional[str] = None   # "packed" | "simulated" | None=auto
 
     def __post_init__(self):
+        from .engine import resolve_execution
+        self.execution, self.params = resolve_execution(self.execution,
+                                                        self.params)
         if not self.model.supports_paged():
             raise ValueError(
                 f"{self.model.cfg.name}: paged serving needs a decoder-only "

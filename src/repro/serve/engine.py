@@ -2,8 +2,11 @@
 
 The engine demonstrates the paper's deployment story end-to-end: params may
 be a mixed pytree with MSB ``QTensor`` leaves (quantize-on-load via
-core.policy); the model dequantizes per layer (simulation mode, paper Sec.
-4.1) or routes through the Pallas fused kernel on TPU.
+core.policy). ``execution="packed"`` (default on TPU) rewrites them once at
+load into kernel-layout ``PackedQTensor`` so every forward streams 4-bit
+codes through the fused Pallas matmul; ``execution="simulated"`` keeps the
+per-layer dequantize of the paper's bf16 simulation (Sec. 4.1). Both modes
+produce identical greedy tokens (DESIGN.md Sec. 9).
 
 This is the non-batched (fixed batch, lockstep decode) fallback; production
 traffic goes through ``serve.continuous.ContinuousEngine``, which adds
@@ -20,14 +23,37 @@ import jax.numpy as jnp
 import numpy as np
 
 
+def resolve_execution(execution, params):
+    """Resolve the engine ``execution`` mode and (maybe) pack params.
+
+    ``"packed"`` rewrites QTensor leaves to kernel-layout ``PackedQTensor``
+    once at load (core.policy.pack_params) so every forward streams 4-bit
+    codes; ``"simulated"`` keeps per-call dequantize (paper-parity bf16
+    math, Sec. 4.1). Default: packed on TPU, simulated elsewhere — the
+    jnp packed fallback is correct off-TPU but pays unpack cost per call.
+    """
+    if execution is None:
+        execution = "packed" if jax.default_backend() == "tpu" else "simulated"
+    if execution == "packed":
+        from ..core.policy import pack_params
+        params, _ = pack_params(params)
+    elif execution != "simulated":
+        raise ValueError(f"execution must be 'packed' or 'simulated', "
+                         f"got {execution!r}")
+    return execution, params
+
+
 @dataclasses.dataclass
 class ServeEngine:
     model: object
     params: object
     max_seq: int
     parallel: object = None
+    execution: Optional[str] = None   # "packed" | "simulated" | None=auto
 
     def __post_init__(self):
+        self.execution, self.params = resolve_execution(self.execution,
+                                                        self.params)
         self._prefill = jax.jit(
             lambda p, b: self.model.prefill(p, b, self.parallel))
         self._decode = jax.jit(

@@ -1,0 +1,293 @@
+"""Packed execution path: layout, kernel parity on serving shapes,
+model dispatch, and packed-vs-simulated engine identity (DESIGN.md Sec. 9)."""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (PackedQTensor, QuantPolicy, dequantize, pack_params,
+                        pack_qtensor, packed_dequantize, packed_gather,
+                        param_bits, quantize_blockwise, quantize_params,
+                        storage_bits_per_weight)
+from repro.kernels.msb_matmul.msb_matmul import msb_matmul, pick_blocks
+from repro.kernels.msb_matmul.ops import packed_matmul, qtensor_matmul
+
+
+def _q(rng, k, n, scale_dtype=jnp.float32):
+    w = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+    return quantize_blockwise(w, bits=4, block=64, solver="kmeans",
+                              scale_dtype=scale_dtype)
+
+
+# ---------------------------------------------------------------------------
+# layout
+# ---------------------------------------------------------------------------
+
+def test_packed_layout_roundtrip_exact(rng):
+    q = _q(rng, 128, 192)
+    pq = pack_qtensor(q)
+    np.testing.assert_array_equal(np.asarray(packed_dequantize(pq)),
+                                  np.asarray(dequantize(q)))
+
+
+def test_packed_layout_pads_n(rng):
+    """N not a multiple of the 128 lane tile (and the pack pad) dequantizes
+    to exact zeros in the padded columns."""
+    q = _q(rng, 64, 192)
+    pq = pack_qtensor(q)
+    assert pq.n == 192 and pq.n_pad % 64 == 0
+    q2 = _q(rng, 128, 64)
+    assert pack_qtensor(q2).n_pad == 64          # already aligned: no pad
+
+
+def test_kblocked_transpose_pack(rng):
+    """Transposed pack of a (V, D) table == dequantize(q).T — same codebook
+    assignment, no re-quantization."""
+    q = _q(rng, 96, 128)                          # V=96 (pads to 128), D=128
+    pq = pack_qtensor(q, transpose=True)
+    assert pq.kblocked and pq.shape == (128, 96)
+    np.testing.assert_array_equal(np.asarray(packed_dequantize(pq)),
+                                  np.asarray(dequantize(q)).T)
+
+
+def test_packed_pytree_static_aux(rng):
+    pq = pack_qtensor(_q(rng, 64, 128))
+    leaves, treedef = jax.tree_util.tree_flatten(pq)
+    assert len(leaves) == 2
+    pq2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert pq2.n == pq.n and pq2.kblocked == pq.kblocked
+    y = jax.jit(lambda p: packed_dequantize(p))(pq)
+    np.testing.assert_array_equal(np.asarray(y),
+                                  np.asarray(packed_dequantize(pq)))
+
+
+def test_packed_scan_slice_invariance(rng):
+    """Stacked (scan-over-layers) packed params slice per period cleanly."""
+    w = jnp.asarray(rng.standard_normal((3, 64, 128)), jnp.float32)
+    pq = pack_qtensor(quantize_blockwise(w, bits=4, block=64,
+                                         solver="kmeans"))
+    sl = jax.tree_util.tree_map(lambda a: a[1], pq)
+    np.testing.assert_array_equal(np.asarray(packed_dequantize(sl)),
+                                  np.asarray(packed_dequantize(pq))[1])
+
+
+# ---------------------------------------------------------------------------
+# kernel parity on serving shapes (interpret mode on CPU)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m", [1, 2, 4, 8])
+@pytest.mark.parametrize("scale_dtype", [jnp.float32, jnp.bfloat16])
+def test_kernel_parity_decode_buckets(rng, m, scale_dtype):
+    """M=1 and bucketed decode M in {2,4,8}, N=192 (not divisible by the
+    128 tile), bf16 and f32 scales."""
+    pq = pack_qtensor(_q(rng, 128, 192, scale_dtype))
+    x = jnp.asarray(rng.standard_normal((m, 128)), jnp.float32)
+    y_k = packed_matmul(x, pq, use_kernel=True, interpret=True)
+    y_r = packed_matmul(x, pq, use_kernel=False)
+    assert y_k.shape == (m, 192)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r),
+                               atol=2e-4, rtol=1e-3)
+
+
+def test_kernel_parity_kblocked(rng):
+    """Unembedding orientation: x (B, D) @ table^T via k-blocked scales."""
+    q = _q(rng, 96, 128)
+    pq = pack_qtensor(q, transpose=True)
+    x = jnp.asarray(rng.standard_normal((4, 128)), jnp.float32)
+    y_k = packed_matmul(x, pq, use_kernel=True, interpret=True)
+    y_d = np.asarray(x) @ np.asarray(dequantize(q)).T
+    np.testing.assert_allclose(np.asarray(y_k), y_d, atol=2e-4, rtol=1e-3)
+
+
+def test_kernel_fused_bias(rng):
+    pq = pack_qtensor(_q(rng, 64, 128))
+    b = jnp.asarray(rng.standard_normal((128,)), jnp.float32)
+    x = jnp.asarray(rng.standard_normal((3, 64)), jnp.float32)
+    y_k = packed_matmul(x, pq, bias=b, use_kernel=True, interpret=True)
+    y_r = packed_matmul(x, pq, bias=b, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r),
+                               atol=2e-4, rtol=1e-3)
+
+
+def test_kernel_fused_bias_padded_n(rng):
+    """Bias of logical width V on a k-blocked table whose storage pads V
+    (V=96 -> 128): kernel pads the bias too instead of crashing."""
+    q = _q(rng, 96, 128)
+    pq = pack_qtensor(q, transpose=True)
+    b = jnp.asarray(rng.standard_normal((96,)), jnp.float32)
+    x = jnp.asarray(rng.standard_normal((2, 128)), jnp.float32)
+    y_k = packed_matmul(x, pq, bias=b, use_kernel=True, interpret=True)
+    y_r = packed_matmul(x, pq, bias=b, use_kernel=False)
+    assert y_k.shape == (2, 96)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r),
+                               atol=2e-4, rtol=1e-3)
+
+
+def test_block_heuristics_divide():
+    for m, k, n in [(1, 2048, 2048), (8, 1024, 4096), (32, 192, 576),
+                    (128, 256, 128), (7, 96, 64)]:
+        bm, bn, bk = pick_blocks(m, k, n)
+        assert n % bn == 0 and k % bk == 0 and bn % 64 == 0
+        assert m > 8 or bm == 8
+
+
+def test_gemv_padding_path(rng):
+    """M smaller than the sublane tile pads internally and slices back."""
+    pq = pack_qtensor(_q(rng, 64, 128))
+    for m in (1, 3, 5):
+        x = jnp.asarray(rng.standard_normal((m, 64)), jnp.float32)
+        y = msb_matmul(x, pq.packed, pq.scales, interpret=True)
+        ref = packed_matmul(x, pq, use_kernel=False)
+        assert y.shape == (m, 128)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                                   atol=2e-4, rtol=1e-3)
+
+
+def test_qtensor_matmul_memoizes_packing(rng):
+    from repro.kernels.msb_matmul import ops
+    q = _q(rng, 64, 128)
+    x = jnp.asarray(rng.standard_normal((2, 64)), jnp.float32)
+    ops._PACK_CACHE.clear()
+    y1 = qtensor_matmul(x, q, use_kernel=False)
+    assert len(ops._PACK_CACHE) == 1
+    y2 = qtensor_matmul(x, q, use_kernel=False)
+    assert len(ops._PACK_CACHE) == 1              # second call: cache hit
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+
+
+# ---------------------------------------------------------------------------
+# packed gather (embedding path)
+# ---------------------------------------------------------------------------
+
+def test_packed_gather_matches_dequant_rows(rng):
+    q = _q(rng, 512, 64)                          # (V, D) table
+    pq = pack_qtensor(q)
+    idx = jnp.asarray(rng.integers(0, 512, (2, 7)), jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(packed_gather(pq, idx)),
+        np.asarray(dequantize(q))[np.asarray(idx)])
+
+
+# ---------------------------------------------------------------------------
+# pack pass + storage accounting
+# ---------------------------------------------------------------------------
+
+def test_pack_params_and_footprint(rng):
+    w = {"mlp": {"wi": _q(rng, 64, 128, jnp.bfloat16)},
+         "norm": jnp.ones((64,), jnp.float32)}
+    packed, report = pack_params(w)
+    assert isinstance(packed["mlp"]["wi"], PackedQTensor)
+    assert "mlp/wi" in report and packed["norm"].shape == (64,)
+    # real packed footprint: 4 bits codes + 8 bf16 scales per 64 block = 6.0
+    assert storage_bits_per_weight(packed["mlp"]["wi"]) == pytest.approx(6.0)
+    # device arrays shrink 2x on the codes (int8 -> two-per-byte uint8)
+    assert packed["mlp"]["wi"].packed.size == 64 * 128 // 2
+    assert param_bits(packed) == param_bits(w)    # idealized accounting agrees
+
+
+def test_pack_params_unembed_transposed(rng):
+    tree = {"unembed": _q(rng, 128, 64), "embed": _q(rng, 128, 64)}
+    packed, _ = pack_params(tree)
+    assert packed["unembed"].kblocked and not packed["embed"].kblocked
+
+
+def test_dense_dispatch_packed_equals_simulated(rng):
+    from repro.models.layers import dense
+    q = _q(rng, 64, 128)
+    pq = pack_qtensor(q)
+    x = jnp.asarray(rng.standard_normal((2, 5, 64)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((128,)), jnp.float32)
+    np.testing.assert_array_equal(np.asarray(dense(x, q, b)),
+                                  np.asarray(dense(x, pq, b)))
+
+
+# ---------------------------------------------------------------------------
+# MoE: per-expert streamed dequant / packed dispatch
+# ---------------------------------------------------------------------------
+
+def _moe_setup(rng, packed):
+    from repro.configs import smoke_config
+    cfg = smoke_config("granite-moe-3b-a800m")
+    e, d, f = cfg.n_experts_padded, cfg.d_model, cfg.d_ff
+    p = {"router": jnp.asarray(rng.standard_normal((d, e)), jnp.float32)}
+    for name, shape in [("wg", (e, d, f)), ("wi", (e, d, f)),
+                        ("wo", (e, f, d))]:
+        w = jnp.asarray(0.1 * rng.standard_normal(shape), jnp.float32)
+        q = quantize_blockwise(w, bits=4, block=64, solver="kmeans")
+        p[name] = pack_qtensor(q) if packed else q
+    x = jnp.asarray(rng.standard_normal((2, 8, d)), jnp.float32)
+    return cfg, p, x
+
+
+@pytest.mark.parametrize("packed", [False, True])
+def test_moe_lazy_expert_path_matches_eager(rng, packed):
+    """Quantized expert weights through the streamed/router-gated path equal
+    the old eager-dequantize-everything result."""
+    from repro.core import dequantize_params
+    from repro.models.moe import moe_layer
+    cfg, p, x = _moe_setup(rng, packed)
+    y_lazy, aux_lazy = moe_layer(p, x, cfg)
+    y_eager, aux_eager = moe_layer(dequantize_params(p), x, cfg)
+    np.testing.assert_allclose(np.asarray(y_lazy), np.asarray(y_eager),
+                               atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(float(aux_lazy), float(aux_eager), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# engines: packed vs simulated token identity
+# ---------------------------------------------------------------------------
+
+def _tiny_quantized_model():
+    from repro.configs import smoke_config
+    from repro.models import Model
+    cfg = smoke_config("internlm2-1.8b")
+    cfg = dataclasses.replace(cfg, vocab_size=64, vocab_round=64)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    params = jax.tree_util.tree_map(lambda p: p.astype(jnp.float32), params)
+    qparams, _ = quantize_params(params, QuantPolicy(
+        bits=4, block=64, solver="kmeans", min_size=1024))
+    return model, qparams
+
+
+def test_continuous_engine_packed_token_identical():
+    """Greedy decode through ContinuousEngine is token-identical between
+    execution="packed" and execution="simulated" (acceptance criterion)."""
+    from repro.serve import ContinuousEngine
+    model, qparams = _tiny_quantized_model()
+    rng = np.random.default_rng(1)
+    reqs = [(rng.integers(0, 64, (int(rng.integers(4, 12)),)).astype(np.int32),
+             int(rng.integers(4, 10))) for _ in range(4)]
+    outs = {}
+    for ex in ("simulated", "packed"):
+        eng = ContinuousEngine(model, qparams, max_batch=4, page_size=4,
+                               num_pages=64, max_seq=32, prefill_chunk=8,
+                               execution=ex)
+        for r in reqs:
+            eng.submit(*r)
+        outs[ex] = eng.run()
+        assert eng.execution == ex
+    assert outs["simulated"].keys() == outs["packed"].keys()
+    for rid in outs["simulated"]:
+        np.testing.assert_array_equal(outs["simulated"][rid],
+                                      outs["packed"][rid])
+
+
+def test_serve_engine_packed_param_tree():
+    """Static engine packs at load: params carry PackedQTensor leaves and
+    the same greedy tokens come out."""
+    from repro.serve import ServeEngine
+    model, qparams = _tiny_quantized_model()
+    prompts = jnp.asarray(np.arange(8, dtype=np.int32).reshape(2, 4))
+    eng_s = ServeEngine(model, qparams, max_seq=32, execution="simulated")
+    eng_p = ServeEngine(model, qparams, max_seq=32, execution="packed")
+    has_packed = any(isinstance(l, PackedQTensor)
+                     for l in jax.tree_util.tree_leaves(
+                         eng_p.params,
+                         is_leaf=lambda x: isinstance(x, PackedQTensor)))
+    assert has_packed
+    out_s = eng_s.generate(prompts, n_tokens=6)
+    out_p = eng_p.generate(prompts, n_tokens=6)
+    np.testing.assert_array_equal(np.asarray(out_s), np.asarray(out_p))
