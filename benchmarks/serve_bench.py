@@ -25,8 +25,14 @@ through the continuous engine on the same burst: identical greedy tokens
 packed path runs the jnp fallback, so wall parity is expected; the packed
 win on hardware is tracked by benchmarks/matmul_bench.py's roofline.
 
+A fourth axis runs the same burst tensor-parallel (``mesh=``) at tp=1/2/4
+over a forced host mesh (``XLA_FLAGS=--xla_force_host_platform_device_
+count=N``), asserting greedy-token identity to tp=1 and recording which
+param groups sharded (DESIGN.md Sec. 10). With one device the axis
+degenerates to tp=1 only.
+
 Emits a JSON comparison to stdout and --out (default
-artifacts/serve_bench.json).
+artifacts/serve_bench.json); see benchmarks/README.md for the schema.
 """
 from __future__ import annotations
 
@@ -157,6 +163,56 @@ def _run_execution_axis(model, qparams, reqs):
     return axis
 
 
+def _run_tp_axis(model, qparams, reqs):
+    """Tensor-parallel axis: the same burst through ContinuousEngine at
+    every host-mesh TP size that fits the device count (force devices with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``).
+
+    Greedy tokens are asserted identical to tp=1 off-TPU (the acceptance
+    invariant; see DESIGN.md Sec. 10). Wall time on a CPU host mesh is
+    reported for honesty only — forced host devices share the same socket,
+    so TP adds collective overhead without adding FLOPs; the axis exists
+    to pin down *correctness* and the sharding report, not speedup.
+    """
+    import jax
+
+    from repro.launch.mesh import make_tp_mesh
+    from repro.serve import ContinuousEngine
+
+    n_dev = len(jax.devices())
+    axis = {"devices": n_dev, "sizes": {}}
+    baseline = None
+    for tp in (1, 2, 4):
+        if tp > n_dev:
+            continue
+        mesh = make_tp_mesh(tp) if tp > 1 else None
+
+        def serve():
+            eng = ContinuousEngine(model, qparams, max_batch=8, page_size=4,
+                                   num_pages=96, max_seq=36, prefill_chunk=8,
+                                   mesh=mesh)
+            for r in reqs:
+                eng.submit(*r)
+            return eng, eng.run()
+
+        serve()                                    # warm jit buckets
+        t0 = time.perf_counter()
+        eng, outs = serve()
+        entry = {"seconds": round(time.perf_counter() - t0, 3),
+                 "tokens": eng.n_tokens_out,
+                 "sharded": dict(getattr(eng, "tp_report", {}))}
+        if baseline is None:
+            baseline = outs
+        else:
+            ident = all(np.array_equal(baseline[r], outs[r])
+                        for r in baseline)
+            entry["tokens_identical_to_tp1"] = bool(ident)
+            if jax.default_backend() != "tpu":
+                assert ident, f"tp={tp}: greedy decode diverged from tp=1"
+        axis["sizes"][f"tp{tp}"] = entry
+    return axis
+
+
 def _run_continuous(model, params, reqs, arrivals, warm=True):
     from repro.serve import ContinuousEngine
 
@@ -229,6 +285,14 @@ def main():
           f" | bits packed/simulated {ex['packed_vs_simulated_bits']:.3f}"
           f" | wall s {ex['simulated']['seconds']} vs "
           f"{ex['packed']['seconds']}")
+
+    report["tensor_parallel"] = _run_tp_axis(model, qparams, reqs)
+    tpx = report["tensor_parallel"]
+    ident = [f"{k}={v.get('tokens_identical_to_tp1', '-')}"
+             for k, v in tpx["sizes"].items()]
+    print(f"[serve_bench] tp axis ({tpx['devices']} devices): "
+          + " | ".join(f"{k} {v['seconds']}s" for k, v in tpx["sizes"].items())
+          + f" | identity {' '.join(ident)}")
 
     os.makedirs(os.path.dirname(args.out), exist_ok=True)
     with open(args.out, "w") as f:

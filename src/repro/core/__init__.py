@@ -10,7 +10,7 @@ from .quantize import (DQScales, PackedQTensor, QTensor, dequantize,
                        quantize_pertensor, storage_bits_per_weight,
                        unpack_codes_int4)
 from .policy import (QuantPolicy, dequantize_params, pack_params, param_bits,
-                     quantize_params)
+                     quantize_params, tp_localize, tp_partition_params)
 from . import baselines, reference
 
 __all__ = [
@@ -21,6 +21,6 @@ __all__ = [
     "packed_gather", "param_bits", "prefix_sums", "quantize_blockwise",
     "quantize_params", "quantize_pertensor", "reconstruction_mse",
     "reference", "solve_blocks", "solve_flat", "storage_bits_per_weight",
-    "unpack_codes_int4", "windowed_dp_boundaries", "xnor_closed_form",
-    "DQScales",
+    "tp_localize", "tp_partition_params", "unpack_codes_int4",
+    "windowed_dp_boundaries", "xnor_closed_form", "DQScales",
 ]

@@ -21,7 +21,8 @@ import jax
 import jax.numpy as jnp
 
 from .quantize import (PackedQTensor, QTensor, dequantize, pack_qtensor,
-                       quantize_blockwise, quantize_pertensor)
+                       quantize_blockwise, quantize_pertensor, tp_pad_packed_k,
+                       tp_pad_packed_n, tp_pad_q_k, tp_pad_q_n)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -103,6 +104,13 @@ def pack_params(params, verbose=False):
     Leaves the pass cannot pack (per-tensor QTensors, other bit-widths,
     plain arrays) stay as-is and keep their simulation-mode execution.
     Returns (tree, report).
+
+    Contract: packing is value-preserving — ``dequantize_params`` of the
+    packed tree equals the unpacked tree's dequantization exactly, except
+    that stored exact-zero codes re-emerge as ``+alpha_0`` (the packed
+    format trades the zero special-case for density; DESIGN.md Sec. 7).
+    The input tree is not mutated. Run this *before*
+    ``tp_partition_params`` — the TP planner consumes packed layouts.
     """
     report = {}
 
@@ -124,6 +132,248 @@ def pack_params(params, verbose=False):
     tree = jax.tree_util.tree_map_with_path(
         visit, params, is_leaf=lambda x: isinstance(x, QTensor))
     return tree, report
+
+
+# ---------------------------------------------------------------------------
+# Tensor-parallel partitioning (DESIGN.md Sec. 10)
+# ---------------------------------------------------------------------------
+
+def _is_q(x):
+    return isinstance(x, (QTensor, PackedQTensor))
+
+
+def _storage_n(leaf):
+    """Stored output-dim width (incl. pack padding)."""
+    return leaf.n_pad if isinstance(leaf, PackedQTensor) else leaf.codes.shape[-1]
+
+
+def _storage_k(leaf):
+    a = leaf.packed if isinstance(leaf, PackedQTensor) else leaf.codes
+    return a.shape[-2]
+
+
+def _roundup(x, m):
+    return -(-x // m) * m
+
+
+def _axis_spec(ndim, pos, axis):
+    from jax.sharding import PartitionSpec as P
+    parts = [None] * ndim
+    parts[pos] = axis
+    return P(*parts)
+
+
+def _leaf_spec(leaf, kind, axis):
+    """PartitionSpec subtree matching one (marked) leaf's pytree structure.
+
+    For Q/Packed leaves the returned object is the *same dataclass* with its
+    array fields replaced by PartitionSpecs, so a spec tree built this way
+    flattens leaf-for-leaf against the params tree (shard_map in_specs,
+    device_put shardings).
+    """
+    from jax.sharding import PartitionSpec as P
+    if isinstance(leaf, PackedQTensor):
+        pd, sd = leaf.packed.ndim, leaf.scales.ndim
+        dims = {None: None, "n": (pd - 1, sd - 2), "k": (pd - 2, sd - 3),
+                "e": (pd - 3, sd - 4)}[kind]
+        if dims is None:
+            return dataclasses.replace(leaf, packed=P(), scales=P())
+        return dataclasses.replace(leaf, packed=_axis_spec(pd, dims[0], axis),
+                                   scales=_axis_spec(sd, dims[1], axis))
+    if isinstance(leaf, QTensor):
+        cd, sd = leaf.codes.ndim, leaf.scales.ndim
+        dims = {None: None, "n": (cd - 1, sd - 2), "k": (cd - 2, sd - 3),
+                "v": (cd - 2, sd - 3), "e": (cd - 3, sd - 4)}[kind]
+        if dims is None:
+            return dataclasses.replace(leaf, codes=P(), scales=P())
+        return dataclasses.replace(leaf, codes=_axis_spec(cd, dims[0], axis),
+                                   scales=_axis_spec(sd, dims[1], axis))
+    if kind == "n" and hasattr(leaf, "ndim"):          # column-parallel bias
+        return _axis_spec(leaf.ndim, leaf.ndim - 1, axis)
+    return P()
+
+
+def _n_shardable_exact(leaf, tp):
+    """Can this leaf's output dim split into whole per-rank blocks with NO
+    padding (required for head-sharded attention projections)?"""
+    if isinstance(leaf, PackedQTensor):
+        return (not leaf.kblocked and leaf.n == leaf.n_pad
+                and leaf.n_pad % (64 * tp) == 0)
+    if isinstance(leaf, QTensor):
+        return leaf.block == 64 and leaf.codes.shape[-1] % (64 * tp) == 0
+    return False
+
+
+def tp_partition_params(params, tp_size, cfg=None, axis="model",
+                        verbose=False):
+    """Partition a (quantized/packed) params tree for tensor parallelism.
+
+    The Megatron-style plan, applied to MSB storage (DESIGN.md Sec. 10):
+
+      * attention ``wq/wk/wv`` (+ qkv biases) column-parallel along heads,
+        ``wo`` row-parallel with a psum — only when every projection is
+        quantized and ``n_heads``/``n_kv_heads`` divide ``tp_size`` with
+        64-block-aligned per-rank widths (no padding is ever introduced
+        inside a head); otherwise the whole attention layer replicates and
+        the engines fall back to slicing *computed* heads for the paged
+        cache.
+      * MLP ``wg/wi`` column-parallel, ``wo`` row-parallel. The shared
+        hidden width is padded to a multiple of ``64*tp_size`` with
+        exact-zero columns/rows, so any ``d_ff`` shards.
+      * MoE expert tensors shard along the expert dim when it divides
+        ``tp_size`` (each rank runs its resident experts; the combine is a
+        psum). The router replicates.
+      * ``unembed`` shards along vocab (column-parallel logits + an
+        all_gather); ``embed`` replicates (it also backs the tied-embedding
+        logits path and the row-gather embedding lookup).
+      * Everything else (norms, plain arrays, per-tensor QTensors)
+        replicates.
+
+    Marks each sharded leaf's ``shard`` aux so the model code knows where
+    to psum/all_gather, and returns ``(params, specs, report)`` where
+    ``specs`` is a PartitionSpec pytree flattening leaf-for-leaf against
+    ``params`` (feed to ``shard_map`` in_specs / ``device_put``) and
+    ``report`` maps group paths to what was done. ``tp_size == 1`` returns
+    the tree unchanged with fully replicated specs.
+    """
+    from jax.sharding import PartitionSpec as P
+    report = {}
+    tp = int(tp_size)
+
+    def repl(node):
+        if isinstance(node, dict):
+            return {k: repl(v) for k, v in node.items()}
+        return _leaf_spec(node, None, None)
+
+    def mark(leaf, kind):
+        return dataclasses.replace(leaf, shard=kind) if _is_q(leaf) else leaf
+
+    def attn_group(group, path):
+        names = ("wq", "wk", "wv", "wo")
+        ok = (tp > 1 and cfg is not None and not cfg.is_encdec
+              and cfg.n_heads % tp == 0 and cfg.n_kv_heads % tp == 0
+              and all(_is_q(group.get(nm)) for nm in names)
+              and all(_n_shardable_exact(group[nm], tp)
+                      for nm in ("wq", "wk", "wv"))
+              and _storage_k(group["wo"]) % tp == 0)
+        if not ok:
+            return dict(group), repl(group)
+        new, spec = {}, {}
+        for key, leaf in group.items():
+            kind = {"wq": "n", "wk": "n", "wv": "n", "wo": "k",
+                    "bq": "n", "bk": "n", "bv": "n"}.get(key)
+            new[key] = mark(leaf, kind)
+            spec[key] = _leaf_spec(new[key], kind, axis)
+        report[path] = "heads"
+        return new, spec
+
+    def mlp_group(group, path):
+        ws = ("wg", "wi", "wo")
+        if tp <= 1 or not all(_is_q(group.get(w)) for w in ws) or any(
+                isinstance(group[w], QTensor) and group[w].block != 64
+                for w in ws):
+            return dict(group), repl(group)
+        f_to = _roundup(max(_storage_n(group["wg"]), _storage_n(group["wi"])),
+                        64 * tp)
+        new, spec = {}, {}
+        for key, leaf in group.items():
+            if key in ("wg", "wi"):
+                leaf = (tp_pad_packed_n(leaf, f_to)
+                        if isinstance(leaf, PackedQTensor)
+                        else tp_pad_q_n(leaf, f_to))
+                kind = "n"
+            elif key == "wo":
+                leaf = (tp_pad_packed_k(leaf, f_to)
+                        if isinstance(leaf, PackedQTensor)
+                        else tp_pad_q_k(leaf, f_to))
+                kind = "k"
+            else:
+                kind = None
+            new[key] = mark(leaf, kind)
+            spec[key] = _leaf_spec(new[key], kind, axis)
+        report[path] = f"column/row hidden->{f_to}"
+        return new, spec
+
+    def moe_group(group, path):
+        ws = ("wg", "wi", "wo")
+        ok = (tp > 1 and all(_is_q(group.get(w)) for w in ws)
+              and all(group[w].codes.ndim >= 3 if isinstance(group[w], QTensor)
+                      else group[w].packed.ndim >= 3 for w in ws))
+        if ok:
+            e = (group["wg"].packed.shape[-3]
+                 if isinstance(group["wg"], PackedQTensor)
+                 else group["wg"].codes.shape[-3])
+            ok = e % tp == 0
+        if not ok:
+            return dict(group), repl(group)
+        new, spec = {}, {}
+        for key, leaf in group.items():
+            kind = "e" if key in ws else None
+            new[key] = mark(leaf, kind)
+            spec[key] = _leaf_spec(new[key], kind, axis)
+        report[path] = "experts"
+        return new, spec
+
+    def unembed_leaf(leaf, path):
+        if tp <= 1 or not _is_q(leaf):
+            return leaf, _leaf_spec(leaf, None, None)
+        if isinstance(leaf, PackedQTensor):
+            if not leaf.kblocked:
+                return leaf, _leaf_spec(leaf, None, None)
+            v_to = _roundup(leaf.n_pad, 64 * tp)
+            leaf = tp_pad_packed_n(leaf, v_to)
+            kind = "n"
+        else:
+            if leaf.block == -1:
+                return leaf, _leaf_spec(leaf, None, None)
+            v_to = _roundup(leaf.codes.shape[-2], tp)
+            leaf = tp_pad_q_k(leaf, v_to)
+            kind = "v"
+        report[path] = f"vocab->{v_to}"
+        leaf = mark(leaf, kind)
+        return leaf, _leaf_spec(leaf, kind, axis)
+
+    def walk(node, path):
+        if not isinstance(node, dict):
+            return node, repl(node)
+        new, spec = {}, {}
+        for key, val in node.items():
+            p = f"{path}/{key}" if path else key
+            if key in ("attn", "xattn") and isinstance(val, dict):
+                new[key], spec[key] = attn_group(val, p)
+            elif key == "mlp" and isinstance(val, dict):
+                new[key], spec[key] = mlp_group(val, p)
+            elif key == "moe" and isinstance(val, dict):
+                new[key], spec[key] = moe_group(val, p)
+            elif key == "unembed":
+                new[key], spec[key] = unembed_leaf(val, p)
+            else:
+                new[key], spec[key] = walk(val, p)
+        return new, spec
+
+    new_params, specs = walk(params, "")
+    if verbose:
+        for p, what in sorted(report.items()):
+            print(f"  tp-sharded {p}: {what}")
+    return new_params, specs, report
+
+
+def tp_localize(params):
+    """Rebind each n-sharded PackedQTensor's static ``n`` to its local width.
+
+    Inside ``shard_map`` the array leaves are per-rank slices but the pytree
+    aux still carries the *global* padded width; run this on the local tree
+    before any matmul so ``packed_matmul`` does not slice past the shard.
+    K-, expert- and vocab-sharded leaves keep their aux unchanged (their
+    ``n``/logical width is not the sharded dim). No-op outside shard_map.
+    """
+    def fix(leaf):
+        if isinstance(leaf, PackedQTensor) and leaf.shard == "n":
+            return dataclasses.replace(leaf, n=leaf.packed.shape[-1] * 2)
+        return leaf
+
+    return jax.tree_util.tree_map(
+        fix, params, is_leaf=lambda x: isinstance(x, PackedQTensor))
 
 
 def dequantize_params(params, dtype=None):

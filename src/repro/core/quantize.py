@@ -29,12 +29,21 @@ from . import grouping
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass(frozen=True)
 class QTensor:
-    """MSB-quantized tensor. Behaves as a pytree (codes/scales are leaves)."""
+    """MSB-quantized tensor. Behaves as a pytree (codes/scales are leaves).
+
+    ``shard`` is static tensor-parallel metadata set by
+    ``core.policy.tp_partition_params`` (None for single-device tensors):
+    ``"n"`` = output (column) dim sharded, ``"k"`` = reduction (row) dim
+    sharded — the consumer must ``psum`` the partial products — ``"e"`` =
+    expert dim sharded, ``"v"`` = vocab rows of an unembedding table
+    sharded (logits need an ``all_gather``). See DESIGN.md Sec. 10.
+    """
     codes: jax.Array          # int8, logical shape of w
     scales: jax.Array         # (n_blocks, n_levels) f32/bf16
     bits: int                 # target bit-width b
     block: int                # block size (64) or -1 for per-tensor
     dtype: object             # dequantized dtype
+    shard: Optional[str] = None   # None | "n" | "k" | "e" | "v"
 
     @property
     def shape(self):
@@ -45,13 +54,14 @@ class QTensor:
         return self.scales.shape[-1]
 
     def tree_flatten(self):
-        return (self.codes, self.scales), (self.bits, self.block, self.dtype)
+        return ((self.codes, self.scales),
+                (self.bits, self.block, self.dtype, self.shard))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         codes, scales = children
-        bits, block, dtype = aux
-        return cls(codes, scales, bits, block, dtype)
+        bits, block, dtype, shard = aux
+        return cls(codes, scales, bits, block, dtype, shard)
 
     def dequantize(self):
         return dequantize(self)
@@ -217,8 +227,16 @@ class PackedQTensor:
         block-along-K grouping of the transposed operand.
 
     Like ``QTensor`` it is a pytree (packed/scales leaves; bits/block/dtype/
-    n/kblocked static), so stacked scan-over-layers params slice cleanly and
-    the static aux never retraces.
+    n/kblocked/shard static), so stacked scan-over-layers params slice
+    cleanly and the static aux never retraces.
+
+    ``shard`` is static tensor-parallel metadata (see ``QTensor``): ``"n"``
+    = N (output) sharded across the mesh's model axis, ``"k"`` = K (row)
+    sharded (consumer psums partial products), ``"e"`` = expert dim
+    sharded. Inside ``shard_map`` the leaves are per-rank slices while the
+    static ``n`` still records the *global* padded width — the engines run
+    ``core.policy.tp_localize`` on the local tree to rebind ``n`` to the
+    local shard width before any matmul.
     """
     packed: jax.Array         # uint8 (..., K, N_pad // 2)
     scales: jax.Array         # see class docstring
@@ -227,6 +245,7 @@ class PackedQTensor:
     dtype: object
     n: int                    # logical N before padding
     kblocked: bool = False
+    shard: Optional[str] = None   # None | "n" | "k" | "e"
 
     @property
     def shape(self):
@@ -238,13 +257,14 @@ class PackedQTensor:
 
     def tree_flatten(self):
         return ((self.packed, self.scales),
-                (self.bits, self.block, self.dtype, self.n, self.kblocked))
+                (self.bits, self.block, self.dtype, self.n, self.kblocked,
+                 self.shard))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         packed, scales = children
-        bits, block, dtype, n, kblocked = aux
-        return cls(packed, scales, bits, block, dtype, n, kblocked)
+        bits, block, dtype, n, kblocked, shard = aux
+        return cls(packed, scales, bits, block, dtype, n, kblocked, shard)
 
     def dequantize(self):
         return packed_dequantize(self)
@@ -352,6 +372,74 @@ def packed_gather(pq: PackedQTensor, idx):
     mag = jnp.take_along_axis(srow.astype(jnp.float32), lv,
                               axis=-1).reshape(*level.shape)
     return (sign * mag)[..., : pq.n].astype(pq.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Tensor-parallel padding (DESIGN.md Sec. 10)
+#
+# Sharding a quantized matmul dim across a mesh axis needs every rank's
+# slice to hold whole 64-element MSB blocks (N) or whole rows (K). When the
+# stored width does not divide, the storage is widened with *exact-zero*
+# columns/rows (zero scales for packed codes, code 0 for int8 codes), which
+# contribute nothing to any matmul — the padded tree computes the same
+# function as the original on every path, sharded or not.
+# ---------------------------------------------------------------------------
+
+def _pad_axis(a, axis, to):
+    cur = a.shape[axis]
+    if cur == to:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, to - cur)
+    return jnp.pad(a, widths)
+
+
+def tp_pad_packed_n(pq: PackedQTensor, n_to: int) -> PackedQTensor:
+    """Widen a PackedQTensor's stored N to ``n_to`` with zero-scale columns.
+
+    ``n`` is rebound to ``n_to``: the padded columns dequantize to exact 0,
+    so consumers see extra all-zero output features (harmless for an MLP
+    hidden dim, masked for a vocab dim) and downstream K-padded row-parallel
+    partners line up with them. Requires whole 64-element blocks
+    (``n_to % block == 0`` — block size is even, so byte packing is safe).
+    """
+    if n_to % pq.block:
+        raise ValueError(f"n_to={n_to} must be a multiple of {pq.block}")
+    if pq.n_pad > n_to:
+        raise ValueError(f"cannot shrink storage {pq.n_pad} -> {n_to}")
+    packed = _pad_axis(pq.packed, -1, n_to // 2)
+    if pq.kblocked:
+        scales = _pad_axis(pq.scales, -2, n_to)
+    else:
+        scales = _pad_axis(pq.scales, -2, n_to // PACK_BLOCK)
+    return dataclasses.replace(pq, packed=packed, scales=scales, n=n_to)
+
+
+def tp_pad_packed_k(pq: PackedQTensor, k_to: int) -> PackedQTensor:
+    """Widen a PackedQTensor's K (row) dim to ``k_to`` with zero-scale rows."""
+    if pq.kblocked:
+        raise ValueError("K-padding needs the natural n-blocked layout")
+    if pq.packed.shape[-2] > k_to:
+        raise ValueError(f"cannot shrink K {pq.packed.shape[-2]} -> {k_to}")
+    return dataclasses.replace(pq,
+                               packed=_pad_axis(pq.packed, -2, k_to),
+                               scales=_pad_axis(pq.scales, -3, k_to))
+
+
+def tp_pad_q_n(q: QTensor, n_to: int) -> QTensor:
+    """Widen a block-wise QTensor's last (output) dim with zero-code columns."""
+    if n_to % q.block:
+        raise ValueError(f"n_to={n_to} must be a multiple of block {q.block}")
+    return dataclasses.replace(q,
+                               codes=_pad_axis(q.codes, -1, n_to),
+                               scales=_pad_axis(q.scales, -2, n_to // q.block))
+
+
+def tp_pad_q_k(q: QTensor, k_to: int) -> QTensor:
+    """Widen a block-wise QTensor's second-to-last (row) dim with zero rows."""
+    return dataclasses.replace(q,
+                               codes=_pad_axis(q.codes, -2, k_to),
+                               scales=_pad_axis(q.scales, -3, k_to))
 
 
 # ---------------------------------------------------------------------------

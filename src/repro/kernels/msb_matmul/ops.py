@@ -28,29 +28,44 @@ def _on_tpu():
 
 
 def packed_matmul(x, pq: PackedQTensor, bias=None, *, use_kernel=None,
-                  interpret=None):
+                  interpret=None, psum_axis=None):
     """y = x @ dequant(pq) (+ bias). x: (..., K); returns (..., pq.n).
 
     ``pq`` must be 2-D storage (a scan-sliced or per-expert leaf). The
     kernel path fuses the bias add; the jnp path replays simulation-mode
-    math on the dequantized weights."""
+    math on the dequantized weights.
+
+    Tensor parallelism (DESIGN.md Sec. 10): under ``shard_map`` the local
+    shard of an N- (column-) sharded weight needs nothing special — pass
+    the local ``pq`` (after ``core.policy.tp_localize``) and the output is
+    the local slice of features. For a K- (row-) sharded weight the local
+    matmul yields *partial products*; pass ``psum_axis`` (the mesh axis
+    name) and the dispatch psums them — the bias, if any, is then added
+    once *after* the psum rather than fused per rank.
+    """
     if pq.packed.ndim != 2:
         raise ValueError(f"packed_matmul wants 2-D storage, got "
                          f"{pq.packed.shape}; slice stacked params first")
     if use_kernel is None:
         use_kernel = _on_tpu()
+    fused_bias = bias if psum_axis is None else None
     if use_kernel:
         if interpret is None:
             interpret = not _on_tpu()
         lead = x.shape[:-1]
         x2 = x.reshape(-1, x.shape[-1])
-        y = msb_matmul(x2, pq.packed, pq.scales, bias,
+        y = msb_matmul(x2, pq.packed, pq.scales, fused_bias,
                        kblocked=pq.kblocked, interpret=interpret)
-        return y[:, : pq.n].reshape(*lead, pq.n).astype(x.dtype)
-    w = pq.dequantize()                      # (K, n), exact simulation math
-    y = jnp.einsum("...d,df->...f", x, w.astype(x.dtype))
-    if bias is not None:
-        y = y + bias.astype(y.dtype)
+        y = y[:, : pq.n].reshape(*lead, pq.n).astype(x.dtype)
+    else:
+        w = pq.dequantize()                  # (K, n), exact simulation math
+        y = jnp.einsum("...d,df->...f", x, w.astype(x.dtype))
+        if fused_bias is not None:
+            y = y + fused_bias.astype(y.dtype)
+    if psum_axis is not None:
+        y = jax.lax.psum(y, psum_axis)
+        if bias is not None:
+            y = y + bias.astype(y.dtype)
     return y
 
 
@@ -76,12 +91,14 @@ def _cached_pack(q: QTensor) -> PackedQTensor:
         return pack_qtensor(q)
     key = (id(q.codes), id(q.scales))
     hit = _PACK_CACHE.get(key)
-    if hit is None or hit[0] is not q.codes:
+    # retain BOTH buffers and identity-check both: an id() can be recycled
+    # after gc, and a stale hit would silently pack the wrong scales
+    if hit is None or hit[0] is not q.codes or hit[1] is not q.scales:
         if len(_PACK_CACHE) > 256:
             _PACK_CACHE.clear()
-        hit = (q.codes, pack_qtensor(q))
+        hit = (q.codes, q.scales, pack_qtensor(q))
         _PACK_CACHE[key] = hit
-    return hit[1]
+    return hit[2]
 
 
 def qtensor_matmul(x, q: QTensor, *, use_kernel=None, interpret=None):

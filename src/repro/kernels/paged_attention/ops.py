@@ -1,4 +1,11 @@
-"""Dispatch wrapper: Pallas kernel on TPU, jnp reference elsewhere."""
+"""Dispatch wrapper: Pallas kernel on TPU, jnp reference elsewhere.
+
+Shapes are shard-local by construction: under tensor parallelism the
+caller passes q with H/tp heads and pools with KV/tp heads (the page dim
+and block tables are replicated), and both the kernel and the reference
+compute exactly the local heads' output — paged attention needs no
+collectives, the surrounding projections do (DESIGN.md Sec. 10).
+"""
 from __future__ import annotations
 
 import jax

@@ -18,6 +18,22 @@ def make_production_mesh(*, multi_pod: bool = False):
         shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
 
 
+def make_tp_mesh(tp_size):
+    """1-D ``("model",)`` mesh over the first ``tp_size`` local devices.
+
+    This is the serving engines' tensor-parallel mesh (no data axis — the
+    continuous-batching engine is one replica; scale-out is by running more
+    engine replicas). On CPU, force multiple host devices first:
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
+    """
+    import numpy as np
+    devs = jax.devices()
+    if tp_size > len(devs):
+        raise ValueError(f"tp={tp_size} needs {tp_size} devices, "
+                         f"have {len(devs)}")
+    return jax.sharding.Mesh(np.asarray(devs[:tp_size]), ("model",))
+
+
 def make_host_mesh(shape=None, axes=("data", "model")):
     """Small mesh over whatever local devices exist (tests/examples)."""
     n = len(jax.devices())

@@ -284,6 +284,11 @@ def paged_attention(q, k_pool, v_pool, block_tables, q_pos, kv_lens, *,
     K/V, which the kernel avoids by streaming pages. Causality is enforced by
     absolute position (kpos <= q_pos), so intra-chunk causal masking in
     chunked prefill falls out for free.
+
+    Head sharding (DESIGN.md Sec. 10): every head attends independently, so
+    under tensor parallelism this function simply runs on the local shard —
+    q with H/tp heads against pools holding KV/tp heads (same GQA ratio) —
+    with no collective; block tables, positions and lengths are replicated.
     """
     b, t, h, d = q.shape
     n_pages, ps, kv, _ = k_pool.shape

@@ -37,14 +37,26 @@ def rope(x, positions, theta=10000.0):
                             x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
 
 
-def dense(x, w, b=None):
+def dense(x, w, b=None, tp=None):
+    """y = x @ w (+ b), dispatching on the weight representation.
+
+    ``tp`` (a ``parallel.TPShard``, only inside shard_map) makes the matmul
+    shard-aware: a K- (row-) sharded quantized weight yields partial
+    products that are psummed over ``tp.axis`` before the bias is added;
+    N- (column-) sharded weights need nothing — the caller works on the
+    local feature slice.
+    """
     from ..core.quantize import PackedQTensor, QTensor
+    psum_axis = (tp.axis if tp is not None
+                 and getattr(w, "shard", None) == "k" else None)
     if isinstance(w, PackedQTensor):  # packed execution: fused kernel on TPU
         from ..kernels.msb_matmul.ops import packed_matmul
-        return packed_matmul(x, w, bias=b)
+        return packed_matmul(x, w, bias=b, psum_axis=psum_axis)
     if isinstance(w, QTensor):      # MSB-quantized serving (simulation mode)
         w = w.dequantize()
     y = jnp.einsum("...d,df->...f", x, w.astype(x.dtype))
+    if psum_axis is not None:
+        y = jax.lax.psum(y, psum_axis)
     if b is not None:
         y = y + b.astype(y.dtype)
     return y
@@ -97,6 +109,21 @@ def _cp_attention(q, k, v, parallel, *, causal, window, softcap, scale,
                      out_specs=spec, check_vma=False)(q, k, v)
 
 
+def _attn_out_proj(out, wo, tp, full_h):
+    """Output projection (B, T, h_local, hd) -> (B, T, D), TP-aware.
+
+    Row- (K-) sharded ``wo`` consumes the local heads directly and ``dense``
+    psums the partial products. A *replicated* ``wo`` after head-sliced
+    attention first all-gathers the heads (rank-major == global head order),
+    which reproduces the single-device activations bit-for-bit.
+    """
+    b, t = out.shape[0], out.shape[1]
+    if (tp is not None and out.shape[2] != full_h
+            and getattr(wo, "shard", None) != "k"):
+        out = jax.lax.all_gather(out, tp.axis, axis=2, tiled=True)
+    return dense(out.reshape(b, t, -1), wo, tp=tp)
+
+
 def attention_layer(p, x, cfg, positions, *, window=0, cache=None,
                     cur_pos=None, xattn_kv=None, causal=True, cross=False,
                     decode_positions=None, parallel=None, paged=None):
@@ -112,22 +139,43 @@ def attention_layer(p, x, cfg, positions, *, window=0, cache=None,
     each sequence's pages (decode AND chunked prefill use this one path).
     Cross-attention decode (``cross=True``): cache holds the static encoder
     k/v from prefill.
+
+    ``parallel`` is either a ``ParallelContext`` (GSPMD constraints on
+    global arrays) or a ``TPShard`` (manual tensor parallelism inside
+    shard_map; DESIGN.md Sec. 10). Under a TPShard, column-sharded QKV
+    projections produce this rank's heads directly; with replicated
+    projections over a head-sharded page pool the computed heads are sliced
+    by ``axis_index``. Either way cache/pool leaves hold KV//tp heads and
+    the output projection psums (row-sharded wo) or all-gathers heads.
     Returns (out, new_cache).
     """
-    from ..parallel.sharding import constraint
+    from ..parallel.sharding import TPShard, constraint
+    tp = parallel if isinstance(parallel, TPShard) else None
+    spmd = None if tp is not None else parallel
     h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
     b = x.shape[0]
-    qkv_ax = _qkv_axes(cfg, parallel)
-    q = dense(x, p["wq"], p.get("bq")).reshape(b, -1, h, hd)
+    w_sharded = tp is not None and getattr(p["wq"], "shard", None) == "n"
+    h_l, kv_l = (h // tp.size, kv // tp.size) if w_sharded else (h, kv)
+    qkv_ax = _qkv_axes(cfg, spmd)
+    q = dense(x, p["wq"], p.get("bq"), tp=tp).reshape(b, -1, h_l, hd)
     if qkv_ax:
-        q = constraint(q, qkv_ax, parallel)
+        q = constraint(q, qkv_ax, spmd)
     softcap = cfg.attn_softcap
     scale = cfg.head_dim_ ** -0.5 if cfg.query_scale == 0 else cfg.query_scale
 
     if paged is not None:
         q_pos = paged["q_pos"]
-        k = dense(x, p["wk"], p.get("bk")).reshape(b, -1, kv, hd)
-        v = dense(x, p["wv"], p.get("bv")).reshape(b, -1, kv, hd)
+        k = dense(x, p["wk"], p.get("bk"), tp=tp).reshape(b, -1, kv_l, hd)
+        v = dense(x, p["wv"], p.get("bv"), tp=tp).reshape(b, -1, kv_l, hd)
+        if (tp is not None and not w_sharded
+                and h % tp.size == 0 and kv % tp.size == 0):
+            # replicated projections over a head-sharded page pool: every
+            # rank computes all heads, keeps its contiguous slice
+            r = jax.lax.axis_index(tp.axis)
+            h_l, kv_l = h // tp.size, kv // tp.size
+            q = jax.lax.dynamic_slice_in_dim(q, r * h_l, h_l, axis=2)
+            k = jax.lax.dynamic_slice_in_dim(k, r * kv_l, kv_l, axis=2)
+            v = jax.lax.dynamic_slice_in_dim(v, r * kv_l, kv_l, axis=2)
         if cfg.use_rope:
             safe_pos = jnp.maximum(q_pos, 0)
             q = rope(q, safe_pos, cfg.rope_theta)
@@ -137,26 +185,26 @@ def attention_layer(p, x, cfg, positions, *, window=0, cache=None,
         out = paged_attention(q, k_pool, v_pool, paged["block_tables"],
                               q_pos, paged["kv_lens"], window=window,
                               softcap=softcap, scale=scale)
-        out = out.reshape(b, -1, h * hd)
-        return dense(out, p["wo"]), {"k": k_pool, "v": v_pool}
+        return (_attn_out_proj(out, p["wo"], tp, h),
+                {"k": k_pool, "v": v_pool})
 
     if cache is None:
         kv_src = xattn_kv if xattn_kv is not None else x
-        k = dense(kv_src, p["wk"], p.get("bk")).reshape(b, -1, kv, hd)
-        v = dense(kv_src, p["wv"], p.get("bv")).reshape(b, -1, kv, hd)
+        k = dense(kv_src, p["wk"], p.get("bk"), tp=tp).reshape(b, -1, kv_l, hd)
+        v = dense(kv_src, p["wv"], p.get("bv"), tp=tp).reshape(b, -1, kv_l, hd)
         if qkv_ax:
-            k = constraint(k, qkv_ax, parallel)
-            v = constraint(v, qkv_ax, parallel)
+            k = constraint(k, qkv_ax, spmd)
+            v = constraint(v, qkv_ax, spmd)
         if xattn_kv is None and cfg.use_rope:
             q = rope(q, positions, cfg.rope_theta)
             k = rope(k, positions, cfg.rope_theta)
-        use_cp = (parallel is not None and qkv_ax is None
-                  and q.shape[1] % (parallel.tp_size
+        use_cp = (spmd is not None and qkv_ax is None
+                  and q.shape[1] % (spmd.tp_size
                                     * min(cfg.attn_chunk, 64)) == 0
-                  and k.shape[1] % parallel.tp_size == 0)
+                  and k.shape[1] % spmd.tp_size == 0)
         if use_cp:
-            chunk = min(cfg.attn_chunk, q.shape[1] // parallel.tp_size)
-            out = _cp_attention(q, k, v, parallel,
+            chunk = min(cfg.attn_chunk, q.shape[1] // spmd.tp_size)
+            out = _cp_attention(q, k, v, spmd,
                                 causal=causal and xattn_kv is None,
                                 window=window, softcap=softcap, scale=scale,
                                 chunk=chunk)
@@ -179,8 +227,8 @@ def attention_layer(p, x, cfg, positions, *, window=0, cache=None,
     else:
         # self-attention decode, ring-buffer cache (rope applied at write)
         s = cache["k"].shape[1]
-        k = dense(x, p["wk"], p.get("bk")).reshape(b, -1, kv, hd)
-        v = dense(x, p["wv"], p.get("bv")).reshape(b, -1, kv, hd)
+        k = dense(x, p["wk"], p.get("bk"), tp=tp).reshape(b, -1, kv_l, hd)
+        v = dense(x, p["wv"], p.get("bv"), tp=tp).reshape(b, -1, kv_l, hd)
         if cfg.use_rope:
             q = rope(q, cur_pos[:, None], cfg.rope_theta)
             k = rope(k, cur_pos[:, None], cfg.rope_theta)
@@ -191,18 +239,21 @@ def attention_layer(p, x, cfg, positions, *, window=0, cache=None,
                                window=window, softcap=softcap, scale=scale,
                                chunk_kv=cfg.decode_chunk)
         new_cache = {"k": k_cache, "v": v_cache}
-    out = out.reshape(b, -1, h * hd)
-    return dense(out, p["wo"]), new_cache
+    return _attn_out_proj(out, p["wo"], tp, h), new_cache
 
 
 # ---------------------------------------------------------------------------
 # Dense SwiGLU MLP
 # ---------------------------------------------------------------------------
 
-def mlp_layer(p, x):
-    gate = jax.nn.silu(dense(x, p["wg"]).astype(jnp.float32)).astype(x.dtype)
-    up = dense(x, p["wi"])
-    return dense(gate * up, p["wo"])
+def mlp_layer(p, x, tp=None):
+    """SwiGLU MLP. Under a ``TPShard``, wg/wi are column-sharded (local
+    hidden slice, padded to whole MSB blocks per rank) and wo row-sharded
+    (``dense`` psums the partial products)."""
+    gate = jax.nn.silu(dense(x, p["wg"], tp=tp)
+                       .astype(jnp.float32)).astype(x.dtype)
+    up = dense(x, p["wi"], tp=tp)
+    return dense(gate * up, p["wo"], tp=tp)
 
 
 # ---------------------------------------------------------------------------

@@ -121,8 +121,18 @@ class Model:
         return loss, {"ce": ce, "router_aux": aux}
 
     # -- serving -----------------------------------------------------------
-    def _logits(self, params, hidden):
+    def _logits(self, params, hidden, parallel=None):
+        """Unembedding projection + softcap + vocab mask.
+
+        Under a ``TPShard`` with a vocab-sharded table (shard "n"/"v",
+        DESIGN.md Sec. 10) each rank computes its vocab slice column-
+        parallel — a full-K local matmul, so every logit is produced whole
+        on exactly one rank — and the slices are all-gathered back to the
+        replicated (B, V) the samplers expect.
+        """
         from ..core.quantize import PackedQTensor
+        from ..parallel.sharding import TPShard
+        tp = parallel if isinstance(parallel, TPShard) else None
         cfg = self.cfg
         table = params.get("unembed", params["embed"])
         if (isinstance(table, PackedQTensor) and table.kblocked
@@ -136,6 +146,8 @@ class Model:
         else:
             logits = jnp.einsum("bd,vd->bv", hidden.astype(jnp.float32),
                                 self._unembed_vd(params).astype(jnp.float32))
+        if tp is not None and getattr(table, "shard", None) in ("n", "v"):
+            logits = jax.lax.all_gather(logits, tp.axis, axis=-1, tiled=True)
         if cfg.logit_softcap > 0:
             logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
         vp = logits.shape[-1]
@@ -156,7 +168,7 @@ class Model:
             params["dec"], x, cfg, positions=positions, parallel=parallel,
             enc_out=enc_out, collect_cache=True)
         x = rms_norm(x, params["final_norm"], cfg.norm_eps)
-        logits = self._logits(params, x[:, -1])
+        logits = self._logits(params, x[:, -1], parallel)
         cache = {"layers": layer_cache}
         if _has_attn(cfg):
             cache["pos"] = jnp.broadcast_to(
@@ -182,7 +194,7 @@ class Model:
             parallel=parallel, cache=cache["layers"], cur_pos=cur_pos,
             decode_positions=decode_positions)
         x = rms_norm(x, params["final_norm"], cfg.norm_eps)
-        logits = self._logits(params, x[:, -1])
+        logits = self._logits(params, x[:, -1], parallel)
         new_cache["layers"] = layer_cache
         return logits, new_cache
 
@@ -220,6 +232,12 @@ class Model:
         Writes the new K/V into the pools and returns (logits at each row's
         last valid token (B, V), new_pools). Padding rows produce garbage
         logits the caller discards.
+
+        ``parallel``: None, a ``ParallelContext`` (GSPMD), or a ``TPShard``
+        when the caller runs this under ``shard_map`` with per-rank param
+        shards and head-sharded pools — inputs/logits are then replicated
+        across the mesh's model axis and the layer stack issues its own
+        psum/all_gather collectives (DESIGN.md Sec. 10).
         """
         cfg = self.cfg
         x = self._embed(params, jnp.maximum(tokens, 0))
@@ -234,7 +252,7 @@ class Model:
         x = rms_norm(x, params["final_norm"], cfg.norm_eps)
         last = jnp.maximum(jnp.sum((q_pos >= 0).astype(jnp.int32), 1) - 1, 0)
         hidden = jnp.take_along_axis(x, last[:, None, None], axis=1)[:, 0]
-        return self._logits(params, hidden), {"layers": layer_pools}
+        return self._logits(params, hidden, parallel), {"layers": layer_pools}
 
     # -- cache specs ---------------------------------------------------------
     def cache_defs(self, batch, seq_len):

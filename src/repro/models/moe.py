@@ -135,9 +135,57 @@ def _combine(ye_flat, flat_slot, gates, keep, t, k, d):
     return jnp.sum(yk * w[..., None], axis=1)
 
 
+def _moe_tp(p, x, cfg, tp):
+    """Expert-sharded MoE under a manual-TP ``shard_map`` (DESIGN.md §10).
+
+    Every rank routes the full (replicated) token stream with the
+    replicated router — gates, expert assignment and per-expert positions
+    are bit-identical across ranks and to the single-device path — then
+    dispatches only the tokens bound for its ``E/tp`` resident experts,
+    runs the streamed/router-gated quantized expert FFN on them, and
+    combines with gates masked to local experts. The psum over the model
+    axis adds disjoint per-rank partial sums (every token-expert term is
+    computed on exactly one rank), so the result equals the single-device
+    combine up to float-add reordering across ranks.
+    """
+    b, s, d = x.shape
+    k = cfg.n_experts_active
+    e_total = cfg.n_experts_padded
+    e_loc = e_total // tp.size
+    capacity = _capacity(b * s, k, e_total, cfg.capacity_factor)
+    x2d = x.reshape(-1, d)
+    gates, eidx, pos, keep, aux = _route(x2d, p["router"], e_total,
+                                         cfg.n_experts, k, capacity)
+    r = jax.lax.axis_index(tp.axis)
+    local = (eidx >= r * e_loc) & (eidx < (r + 1) * e_loc)
+    keep_l = keep & local
+    eidx_l = jnp.where(local, eidx - r * e_loc, 0)
+    buf, flat_slot = _dispatch(x2d, gates, eidx_l, pos, keep_l, e_loc,
+                               capacity)
+    xe = buf[:-1].reshape(e_loc, capacity, d)
+    counts = jnp.zeros((e_loc,), jnp.int32).at[eidx_l.reshape(-1)].add(
+        keep_l.reshape(-1).astype(jnp.int32))
+    ye = _expert_ffn_quantized(xe, p["wg"], p["wi"], p["wo"], counts)
+    y = _combine(ye.reshape(-1, d), flat_slot, gates, keep_l, b * s, k, d)
+    y = jax.lax.psum(y, tp.axis)
+    return y.reshape(b, s, d), aux
+
+
 def moe_layer(p, x, cfg, parallel=None):
-    """x: (B, S, D) -> (B, S, D). ``parallel`` = ParallelContext or None."""
+    """x: (B, S, D) -> (B, S, D).
+
+    ``parallel``: None (single device), a ``ParallelContext`` (training-
+    style all-to-all expert parallelism under its own shard_map), or a
+    ``TPShard`` (serving: already inside shard_map — expert-sharded leaves
+    take ``_moe_tp``, anything else falls back to the replicated local
+    path, which is exact).
+    """
     from ..core.quantize import PackedQTensor, QTensor
+    from ..parallel.sharding import TPShard
+    if isinstance(parallel, TPShard):
+        if parallel.size > 1 and getattr(p.get("wg"), "shard", None) == "e":
+            return _moe_tp(p, x, cfg, parallel)
+        parallel = None
     quantized = isinstance(p.get("wg"), (QTensor, PackedQTensor))
     b, s, d = x.shape
     k = cfg.n_experts_active

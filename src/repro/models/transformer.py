@@ -234,6 +234,8 @@ def _shard(x, spec, parallel):
 def _block(x, lp, cfg, mixer, ffn, *, window, positions, cur_pos, cache,
            enc_out, parallel, cross, decode_positions=None, paged=None):
     """One (mixer + ffn) residual block. Returns (x, new_cache, aux)."""
+    from ..parallel.sharding import ParallelContext, TPShard
+    tp = parallel if isinstance(parallel, TPShard) else None
     aux = jnp.float32(0.0)
     h = rms_norm(x, lp["norm1"], cfg.norm_eps)
     if mixer in ("attn", "enc_attn"):
@@ -246,7 +248,7 @@ def _block(x, lp, cfg, mixer, ffn, *, window, positions, cur_pos, cache,
     elif mixer == "mamba":
         y, new_mix_cache = ssm.mamba_layer(
             lp["mamba"], h, cfg, None if cache is None else cache.get("mamba"),
-            parallel=parallel)
+            parallel=None if tp is not None else parallel)
     elif mixer == "slstm":
         y, new_mix_cache = xlstm.slstm_layer(
             lp["slstm"], h, cfg, None if cache is None else cache.get("slstm"))
@@ -273,14 +275,14 @@ def _block(x, lp, cfg, mixer, ffn, *, window, positions, cur_pos, cache,
         h = rms_norm(x, lp["norm2"], cfg.norm_eps)
         y = jnp.zeros_like(x)
         if ffn in ("dense", "moe+dense"):
-            y = y + mlp_layer(lp["mlp"], h)
+            y = y + mlp_layer(lp["mlp"], h, tp=tp)
         if ffn in ("moe", "moe+dense"):
             ym, aux = moe_layer(lp["moe"], h, cfg, parallel)
             y = y + ym
         if cfg.post_norm:
             y = rms_norm(y, lp["norm2b"], cfg.norm_eps)
         x = x + y
-    if parallel is not None:
+    if isinstance(parallel, ParallelContext):
         # sequence parallelism on the residual stream: the layer-boundary
         # activations the remat'd scan stores shrink by the tp size
         # (Megatron-SP; the resolver drops `sp` when S % tp != 0, e.g. decode)

@@ -25,6 +25,43 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 
 @dataclasses.dataclass(frozen=True)
+class TPShard:
+    """Manual tensor-parallel context, live only *inside* ``shard_map``.
+
+    Where ``ParallelContext`` drives GSPMD (sharding constraints on global
+    arrays, the compiler inserts collectives), ``TPShard`` drives the
+    *manual* serving data plane: the engines split params/caches per rank
+    with ``shard_map`` and the model code issues its own collectives —
+    ``psum`` after row-parallel (K-sharded) matmuls, ``all_gather`` over
+    heads or vocab shards. Model functions distinguish the two by type:
+    a ``TPShard`` ``parallel=`` argument means "you are running on the
+    local shard of a mesh axis named ``axis`` of size ``size``".
+    """
+    axis: str = "model"
+    size: int = 1
+
+
+def shard_map_compat(f, mesh, in_specs, out_specs):
+    """``jax.shard_map`` across jax versions, replication checking off.
+
+    The manual-TP step produces replicated outputs by construction (psum /
+    all_gather); the rep/vma checker of some jax versions cannot prove
+    that through ``axis_index``-based head slicing, so it is disabled.
+    """
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        try:
+            return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_vma=False)
+        except TypeError:  # pragma: no cover - older keyword
+            return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=False)
+    from jax.experimental.shard_map import shard_map as sm_exp
+    return sm_exp(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_rep=False)
+
+
+@dataclasses.dataclass(frozen=True)
 class ParallelContext:
     mesh: Mesh
     dp_axes: Tuple[str, ...]
@@ -63,7 +100,13 @@ class ParallelContext:
 def from_mesh(mesh: Mesh) -> ParallelContext:
     names = mesh.axis_names
     dp = tuple(a for a in names if a in ("pod", "data"))
-    return ParallelContext(mesh=mesh, dp_axes=dp or (names[0],),
+    # a pure tensor-parallel mesh (("model",) only — the serving engines'
+    # default) has no data axis at all: dp_size == 1
+    if not dp and "model" in names and len(names) == 1:
+        dp = ()
+    elif not dp:
+        dp = (names[0],)
+    return ParallelContext(mesh=mesh, dp_axes=dp,
                            tp_axis="model" if "model" in names else names[-1],
                            fsdp_axis="data" if "data" in names else None)
 

@@ -16,6 +16,12 @@ scatter into the reserved scratch page, so no retracing ever happens once
 the buckets are warm. Greedy sampling happens on host from the returned
 last-token logits, which is what makes output token-identical to the static
 ``ServeEngine`` (same model math, same argmax).
+
+``mesh=`` runs the whole data plane tensor-parallel (DESIGN.md Sec. 10):
+params partition along N/K/experts/vocab, the page pools by KV head, and
+every step is one ``shard_map`` dispatch with manual psum/all_gather
+collectives. The scheduler, allocator and sampling stay on host and
+unsharded — greedy output is token-identical across TP sizes.
 """
 from __future__ import annotations
 
@@ -55,15 +61,20 @@ class ContinuousEngine:
     prefill_chunk: int = 32
     parallel: object = None
     execution: Optional[str] = None   # "packed" | "simulated" | None=auto
+    mesh: object = None               # tensor-parallel device mesh
 
     def __post_init__(self):
         from .engine import resolve_execution
-        self.execution, self.params = resolve_execution(self.execution,
-                                                        self.params)
+        if self.mesh is not None and self.parallel is not None:
+            raise ValueError("pass either mesh= (manual TP) or parallel= "
+                             "(GSPMD), not both")
+        # reject unsupported models before the O(params) pack pass
         if not self.model.supports_paged():
             raise ValueError(
                 f"{self.model.cfg.name}: paged serving needs a decoder-only "
                 "attention stack (ssm/xlstm/enc-dec caches are not paged)")
+        self.execution, self.params = resolve_execution(self.execution,
+                                                        self.params)
         mpps = self.max_pages_per_seq
         if mpps is None and self.max_seq is not None:
             mpps = -(-self.max_seq // self.page_size)
@@ -72,7 +83,9 @@ class ContinuousEngine:
             max_seqs=self.max_batch, max_pages_per_seq=mpps)
         self.scheduler = Scheduler(self.cache, self.max_batch,
                                    self.prefill_chunk)
-        if self.parallel is None:
+        if self.mesh is not None:
+            self._init_tensor_parallel()
+        elif self.parallel is None:
             self._step_fn = functools.partial(_paged_step, self.model)
         else:                              # parallel objects aren't hashable
             self._step_fn = jax.jit(
@@ -85,8 +98,60 @@ class ContinuousEngine:
         self.n_tokens_out = 0
         self.n_work_positions = 0     # device token-positions incl. padding
 
+    def _init_tensor_parallel(self):
+        """Shard params + page pools over ``mesh`` and build the shard_map
+        step (DESIGN.md Sec. 10).
+
+        Packed codes/codebooks partition along N (column-parallel QKV/up/
+        gate, vocab) and K (row-parallel o/down, psum inside the step); the
+        K/V page pools partition along the KV-head dim whenever the head
+        counts divide the mesh's model axis; the block tables, token batch
+        and logits stay replicated, so the scheduler/allocator control
+        plane is untouched.
+        """
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from ..core.policy import tp_localize, tp_partition_params
+        from ..parallel.sharding import TPShard, from_mesh, shard_map_compat
+        ctx = from_mesh(self.mesh)
+        tp = TPShard(axis=ctx.tp_axis, size=ctx.tp_size)
+        self.tp = tp
+        cfg = self.model.cfg
+        self.params, pspecs, self.tp_report = tp_partition_params(
+            self.params, tp.size, cfg=cfg, axis=tp.axis)
+        self.params = jax.device_put(
+            self.params,
+            jax.tree_util.tree_map(lambda s: NamedSharding(self.mesh, s),
+                                   pspecs))
+        heads_ok = (tp.size > 1 and cfg.n_heads % tp.size == 0
+                    and cfg.n_kv_heads % tp.size == 0)
+        # pool leaves: (n_periods, num_pages, page_size, KV, head_dim)
+        pool_spec = (P(None, None, None, tp.axis, None) if heads_ok else P())
+        self.cache.pools = jax.device_put(
+            self.cache.pools, NamedSharding(self.mesh, pool_spec))
+        model, rep = self.model, P()
+
+        def local_step(pools, params, tokens, q_pos, kv_lens, bt):
+            return model.paged_step(tp_localize(params), pools, tokens,
+                                    q_pos, kv_lens, bt, parallel=tp)
+
+        fn = shard_map_compat(
+            local_step, self.mesh,
+            in_specs=(pool_spec, pspecs, rep, rep, rep, rep),
+            out_specs=(rep, pool_spec))
+        donate = (0,) if jax.default_backend() in ("tpu", "gpu") else ()
+        self._step_fn = jax.jit(fn, donate_argnums=donate)
+
     # -- API ----------------------------------------------------------------
     def submit(self, prompt, max_new_tokens, eos_id=None) -> int:
+        """Enqueue one request; returns its id (the ``collect()`` key).
+
+        Non-blocking and device-free: nothing is scheduled or transferred
+        until a ``step()``. Raises ``ValueError`` if ``prompt`` plus
+        ``max_new_tokens`` can never fit the page pool (admission control —
+        an accepted request is guaranteed to eventually complete, through
+        preemption if need be). Generation stops after ``max_new_tokens``
+        or on the first ``eos_id`` (which is included in the output).
+        """
         req_id = self._next_id
         self._next_id += 1
         req = Request(req_id, np.asarray(prompt, np.int32).reshape(-1),
@@ -95,7 +160,12 @@ class ContinuousEngine:
         return req_id
 
     def step(self) -> bool:
-        """Run one unit of work. Returns False when there is nothing to do."""
+        """Run one scheduler-chosen unit of work (one prefill chunk or one
+        packed decode batch = one jitted device dispatch); returns False
+        when no submitted work remains. Safe to interleave with ``submit``
+        — new requests join from the next step. Greedy sampling happens on
+        host from the returned logits, so outputs are reproducible across
+        ``execution`` modes and TP meshes (same math, same argmax)."""
         work = self.scheduler.schedule()
         if work is None:
             return False
@@ -107,7 +177,10 @@ class ContinuousEngine:
         return True
 
     def collect(self) -> Dict[int, np.ndarray]:
-        """Drain outputs of requests finished since the last collect()."""
+        """Drain outputs finished since the last ``collect()``: a dict
+        ``req_id -> int32 generated tokens`` (prompt not included). Each
+        finished request is returned exactly once; uncollected results are
+        held, never dropped."""
         out, self._finished = self._finished, {}
         return out
 

@@ -45,22 +45,92 @@ def resolve_execution(execution, params):
 
 @dataclasses.dataclass
 class ServeEngine:
+    """Static-batch serving engine.
+
+    Contract: ``generate(prompts, n)`` runs one prefill + n lockstep greedy
+    decode steps and returns exactly the argmax token sequence of the
+    underlying model — independent of ``execution`` mode and of ``mesh``
+    (tensor parallelism changes where the math runs, not which tokens come
+    out). ``params`` may be any mixed pytree of dense arrays and MSB
+    ``QTensor`` leaves; the engine never mutates the caller's tree in
+    place.
+
+    ``mesh``: optional device mesh for tensor parallelism. Params are
+    partitioned once at load (``core.policy.tp_partition_params``) and
+    prefill/decode run under ``shard_map`` with manual collectives; the KV
+    ring cache shards by head exactly when the attention projections
+    themselves sharded. ``parallel`` (a ``ParallelContext``) remains the
+    GSPMD alternative; the two are mutually exclusive.
+    """
     model: object
     params: object
     max_seq: int
     parallel: object = None
     execution: Optional[str] = None   # "packed" | "simulated" | None=auto
+    mesh: object = None               # tensor-parallel device mesh
 
     def __post_init__(self):
+        if self.mesh is not None and self.parallel is not None:
+            raise ValueError("pass either mesh= (manual TP) or parallel= "
+                             "(GSPMD), not both")
         self.execution, self.params = resolve_execution(self.execution,
                                                         self.params)
-        self._prefill = jax.jit(
-            lambda p, b: self.model.prefill(p, b, self.parallel))
-        self._decode = jax.jit(
-            lambda p, c, t, pos: self.model.decode_step(p, c, t, pos,
-                                                        self.parallel))
+        if self.mesh is not None:
+            self._init_tensor_parallel()
+        else:
+            self._prefill = jax.jit(
+                lambda p, b: self.model.prefill(p, b, self.parallel))
+            self._decode = jax.jit(
+                lambda p, c, t, pos: self.model.decode_step(p, c, t, pos,
+                                                            self.parallel))
         self._score = jax.jit(
             lambda p, b: self.model.loss(p, b, self.parallel))
+
+    def _init_tensor_parallel(self):
+        """Build shard_map'd prefill/decode over ``mesh`` (DESIGN.md §10).
+
+        The KV ring cache shards by head only when the attention weights
+        themselves sharded (the planner's all-or-nothing head rule);
+        otherwise attention is replicated and only MLP / MoE / unembedding
+        run tensor-parallel. Logits come back replicated either way.
+        """
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from ..core.policy import tp_localize, tp_partition_params
+        from ..parallel.sharding import TPShard, from_mesh, shard_map_compat
+        ctx = from_mesh(self.mesh)
+        tp = TPShard(axis=ctx.tp_axis, size=ctx.tp_size)
+        self.tp = tp
+        self.params, pspecs, self.tp_report = tp_partition_params(
+            self.params, tp.size, cfg=self.model.cfg, axis=tp.axis)
+        self.params = jax.device_put(
+            self.params,
+            jax.tree_util.tree_map(lambda s: NamedSharding(self.mesh, s),
+                                   pspecs))
+        attn_sharded = any(v == "heads" for v in self.tp_report.values())
+
+        def cache_spec(defs):
+            if isinstance(defs, dict):
+                return {k: cache_spec(v) for k, v in defs.items()}
+            _shape, _dt, axes = defs
+            return P(*[tp.axis if a == "heads" and attn_sharded else None
+                       for a in axes])
+
+        cspecs = cache_spec(self.model.cache_defs(1, 1))
+        model, rep = self.model, P()
+
+        def local_prefill(params, batch):
+            return model.prefill(tp_localize(params), batch, tp)
+
+        def local_decode(params, cache, tokens, pos):
+            return model.decode_step(tp_localize(params), cache, tokens,
+                                     pos, tp)
+
+        self._prefill = jax.jit(shard_map_compat(
+            local_prefill, self.mesh, in_specs=(pspecs, rep),
+            out_specs=(rep, cspecs)))
+        self._decode = jax.jit(shard_map_compat(
+            local_decode, self.mesh, in_specs=(pspecs, cspecs, rep, rep),
+            out_specs=(rep, cspecs)))
 
     def _grow_cache(self, cache, prompt_len):
         """Re-home prefill caches (length P) into max_seq ring buffers.

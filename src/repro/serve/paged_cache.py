@@ -11,6 +11,13 @@ can still be written).
 Page 0 is reserved as a scratch page: padding rows of the packed batch
 scatter their (garbage) K/V there, so the jitted step needs no masking
 branches. The allocator never hands page 0 to a sequence.
+
+Tensor parallelism (DESIGN.md Sec. 10) never touches this control plane:
+page ids, block tables, lengths and refcounts are head-agnostic. Under a
+TP mesh the engine re-homes ``pools`` with a head-sharded NamedSharding
+(leaf dim 3, the KV-head dim, split over the model axis) and every device
+holds the *same pages* for *its* heads — one block-table row addresses all
+shards at once, and fork/preempt/commit work unchanged.
 """
 from __future__ import annotations
 
@@ -28,6 +35,18 @@ class OutOfPages(Exception):
 
 
 class PagedKVCache:
+    """Host-side page allocator + device page pools.
+
+    Contract: ``reserve`` is all-or-nothing (raises ``OutOfPages`` with no
+    partial allocation), ``commit`` only ever records lengths the caller
+    has actually written device-side, ``release`` returns a slot's pages in
+    reverse order (LIFO reuse keeps prefixes warm), and ``fork`` shares
+    full pages by refcount while copying only the final partial page.
+    ``pools`` is an opaque device pytree owned by the jitted serving step;
+    this class never reads it, only swaps it wholesale (fork's page copy,
+    the engine's sharded re-homing).
+    """
+
     def __init__(self, model, *, num_pages, page_size, max_seqs,
                  max_pages_per_seq=None):
         if num_pages < 2:

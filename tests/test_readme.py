@@ -1,0 +1,20 @@
+"""The README front door is executable: every fenced ```python block runs.
+
+CI executes this as its own step, so quickstart snippets cannot drift from
+the code. Blocks share one namespace (later blocks may build on earlier
+ones) and must be device-count agnostic — TP demos gate on
+``len(jax.devices())``.
+"""
+import pathlib
+import re
+
+
+def test_readme_python_snippets_run():
+    readme = pathlib.Path(__file__).resolve().parent.parent / "README.md"
+    blocks = re.findall(r"```python\n(.*?)```", readme.read_text(), re.S)
+    assert blocks, "README.md has no ```python blocks"
+    ns = {}
+    for i, block in enumerate(blocks):
+        exec(compile(block, f"README.md[block {i}]", "exec"), ns)
+    assert "outputs" in ns and ns["outputs"], \
+        "quickstart produced no serving outputs"

@@ -1,0 +1,234 @@
+"""Tensor-parallel packed serving (DESIGN.md Sec. 10).
+
+Acceptance invariant: greedy decode is token-identical between tp=1 and
+tp>1 on a forced host mesh, for both execution="packed" and "simulated",
+through both engines — plus the mixed-topology edge cases: hidden dims
+that need padded shards, MoE experts under TP, and forced preemption on a
+head-sharded paged cache.
+"""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import smoke_config
+from repro.core import (PackedQTensor, QTensor, QuantPolicy, pack_params,
+                        quantize_params, tp_localize, tp_partition_params)
+from repro.launch.mesh import make_tp_mesh
+from repro.models import Model
+from repro.serve import ContinuousEngine, ServeEngine
+
+
+def _mesh_or_skip(tp):
+    if len(jax.devices()) < tp:
+        pytest.skip(f"needs {tp} devices (XLA_FLAGS="
+                    f"--xla_force_host_platform_device_count={tp})")
+    return make_tp_mesh(tp)
+
+
+def _quantized(arch="internlm2-1.8b", **over):
+    cfg = smoke_config(arch)
+    cfg = dataclasses.replace(cfg, vocab_size=64, vocab_round=64, **over)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    params = jax.tree_util.tree_map(lambda p: p.astype(jnp.float32), params)
+    qparams, _ = quantize_params(params, QuantPolicy(
+        bits=4, block=64, solver="kmeans", min_size=1024))
+    return model, qparams
+
+
+@pytest.fixture(scope="module")
+def dense_model():
+    return _quantized()
+
+
+@pytest.fixture(scope="module")
+def moe_model():
+    return _quantized("granite-moe-3b-a800m")
+
+
+@pytest.fixture(scope="module")
+def wide_head_model():
+    """Head-dim large enough that QKV projections are quantized with whole
+    64-blocks per rank at tp=2 -> the planner weight-shards attention."""
+    return _quantized(n_heads=2, n_kv_heads=2, head_dim=64)
+
+
+def _requests(seed=1, n=4):
+    rng = np.random.default_rng(seed)
+    return [(rng.integers(0, 64, (int(rng.integers(4, 12)),)).astype(np.int32),
+             int(rng.integers(4, 10))) for _ in range(n)]
+
+
+def _serve(model, qparams, execution, mesh=None, num_pages=64, seed=1):
+    eng = ContinuousEngine(model, qparams, max_batch=4, page_size=4,
+                           num_pages=num_pages, max_seq=32, prefill_chunk=8,
+                           execution=execution, mesh=mesh)
+    for r in _requests(seed):
+        eng.submit(*r)
+    return eng, eng.run()
+
+
+def _assert_identical(a, b):
+    assert a.keys() == b.keys()
+    for rid in a:
+        np.testing.assert_array_equal(a[rid], b[rid])
+
+
+# ---------------------------------------------------------------------------
+# planner: marks, padded shards, specs
+# ---------------------------------------------------------------------------
+
+def test_planner_padded_mlp_and_vocab(dense_model):
+    """d_ff=128 at tp=4 cannot split into whole 64-blocks -> the planner
+    pads the hidden dim to 256 (zero columns/rows) on both sides of the
+    SwiGLU, and shards the untied unembedding along vocab."""
+    model, qparams = dense_model
+    tree, specs, report = tp_partition_params(qparams, 4, cfg=model.cfg)
+    mlp = tree["dec"]["s0"]["mlp"]
+    assert mlp["wg"].shard == "n" and mlp["wi"].shard == "n"
+    assert mlp["wo"].shard == "k"
+    assert mlp["wg"].codes.shape[-1] == 256          # padded to 64*tp
+    assert mlp["wo"].codes.shape[-2] == 256          # row-parallel pair
+    assert tree["unembed"].shard == "v"
+    # attention cannot head-shard at tp=4 (kv=2) nor block-align: replicated
+    assert getattr(tree["dec"]["s0"]["attn"]["wq"], "shard", None) is None
+    assert "dec/s0/mlp" in report and "unembed" in report
+    # spec tree flattens leaf-for-leaf against the params tree
+    assert (jax.tree_util.tree_structure(tree)
+            == jax.tree_util.tree_structure(specs))
+
+
+def test_planner_padding_is_value_preserving(dense_model):
+    """The padded tree computes the same function: zero-scale columns and
+    zero rows contribute nothing to any matmul."""
+    model, qparams = dense_model
+    tree, _, _ = tp_partition_params(qparams, 4, cfg=model.cfg)
+    wg0 = qparams["dec"]["s0"]["mlp"]["wg"].dequantize()
+    wg1 = tree["dec"]["s0"]["mlp"]["wg"].dequantize()
+    np.testing.assert_array_equal(np.asarray(wg1[..., :wg0.shape[-1]]),
+                                  np.asarray(wg0))
+    assert not np.asarray(wg1[..., wg0.shape[-1]:]).any()
+    wo1 = tree["dec"]["s0"]["mlp"]["wo"].dequantize()
+    assert not np.asarray(wo1[:, wg0.shape[-1]:, :]).any()
+
+
+def test_planner_packed_localize(dense_model):
+    """Packed leaves keep the global padded width in aux; tp_localize
+    rebinds n to the (mock-)local storage width for n-sharded leaves."""
+    model, qparams = dense_model
+    packed, _ = pack_params(qparams)
+    tree, _, _ = tp_partition_params(packed, 4, cfg=model.cfg)
+    wg = tree["dec"]["s0"]["mlp"]["wg"]
+    assert isinstance(wg, PackedQTensor) and wg.shard == "n"
+    assert wg.n == wg.n_pad == 256
+    local = jax.tree_util.tree_map(
+        lambda a: a[..., : a.shape[-1] // 4]
+        if a.dtype == jnp.uint8 else a, wg)
+    assert tp_localize({"wg": local})["wg"].n == 64
+
+
+def test_planner_odd_tp_packs(dense_model):
+    """Odd tp sizes pad to 64*tp (not 128-multiples): d_ff=128 at tp=3 ->
+    192, one whole block (32 packed bytes) per rank."""
+    model, qparams = dense_model
+    packed, _ = pack_params(qparams)
+    tree, _, report = tp_partition_params(packed, 3, cfg=model.cfg)
+    wg = tree["dec"]["s0"]["mlp"]["wg"]
+    assert wg.n == wg.n_pad == 192 and wg.shard == "n"
+    assert "dec/s0/mlp" in report
+
+
+def test_planner_tp1_is_identity(dense_model):
+    model, qparams = dense_model
+    tree, specs, report = tp_partition_params(qparams, 1, cfg=model.cfg)
+    assert report == {}
+    assert (jax.tree_util.tree_structure(tree)
+            == jax.tree_util.tree_structure(specs))
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(qparams)):
+        assert a is b
+
+
+# ---------------------------------------------------------------------------
+# acceptance: greedy decode token-identical tp=1 vs tp>1
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("execution", ["simulated", "packed"])
+@pytest.mark.parametrize("tp", [2, 4])
+def test_continuous_tp_token_identity(dense_model, execution, tp):
+    """tp=2 head-shards the paged pools (kv=2); tp=4 falls back to
+    replicated attention with padded-shard MLP + vocab-sharded logits.
+    Both must reproduce the tp=1 greedy tokens exactly."""
+    mesh = _mesh_or_skip(tp)
+    model, qparams = dense_model
+    _, base = _serve(model, qparams, execution)
+    eng, out = _serve(model, qparams, execution, mesh)
+    _assert_identical(base, out)
+    assert eng.tp_report                   # something actually sharded
+
+
+@pytest.mark.parametrize("execution", ["simulated", "packed"])
+def test_serve_engine_tp_token_identity(dense_model, execution):
+    mesh = _mesh_or_skip(2)
+    model, qparams = dense_model
+    prompts = jnp.asarray(np.arange(8, dtype=np.int32).reshape(2, 4))
+    eng1 = ServeEngine(model, qparams, max_seq=32, execution=execution)
+    eng2 = ServeEngine(model, qparams, max_seq=32, execution=execution,
+                       mesh=mesh)
+    np.testing.assert_array_equal(
+        np.asarray(eng1.generate(prompts, n_tokens=6)),
+        np.asarray(eng2.generate(prompts, n_tokens=6)))
+
+
+@pytest.mark.parametrize("execution", ["simulated", "packed"])
+def test_weight_sharded_attention_heads(wide_head_model, execution):
+    """With 64-block-aligned per-rank head widths the planner column-shards
+    QKV / row-shards wo (psum) instead of slicing computed heads."""
+    mesh = _mesh_or_skip(2)
+    model, qparams = wide_head_model
+    _, base = _serve(model, qparams, execution)
+    eng, out = _serve(model, qparams, execution, mesh)
+    assert eng.tp_report.get("dec/s0/attn") == "heads"
+    _assert_identical(base, out)
+
+
+# ---------------------------------------------------------------------------
+# mixed-topology edge cases
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("execution", ["simulated", "packed"])
+def test_moe_experts_under_tp(moe_model, execution):
+    """16 padded experts shard 4 ways; routing is replicated so the
+    token->expert assignment (and greedy output) matches tp=1 exactly."""
+    mesh = _mesh_or_skip(4)
+    model, qparams = moe_model
+    _, base = _serve(model, qparams, execution, seed=2)
+    eng, out = _serve(model, qparams, execution, mesh, seed=2)
+    assert eng.tp_report.get("dec/s0/moe") == "experts"
+    _assert_identical(base, out)
+
+
+def test_preemption_on_sharded_cache(dense_model):
+    """A page pool too small for the burst forces preemption by recompute;
+    re-prefill through the head-sharded pools must reproduce the
+    un-preempted tp=1 output."""
+    mesh = _mesh_or_skip(2)
+    model, qparams = dense_model
+    _, base = _serve(model, qparams, "simulated", num_pages=64, seed=2)
+    eng, out = _serve(model, qparams, "simulated", mesh, num_pages=8, seed=2)
+    assert eng.scheduler.n_preemptions > 0
+    _assert_identical(base, out)
+
+
+def test_tp_engine_still_scores(dense_model):
+    """The sharded param tree remains usable outside shard_map (plain jit
+    over global arrays): ServeEngine.score works under a TP mesh."""
+    mesh = _mesh_or_skip(2)
+    model, qparams = dense_model
+    eng = ServeEngine(model, qparams, max_seq=32, execution="simulated",
+                      mesh=mesh)
+    tokens = jnp.asarray(np.arange(16, dtype=np.int32).reshape(2, 8)) % 64
+    assert np.isfinite(eng.score(tokens))
