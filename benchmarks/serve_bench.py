@@ -31,6 +31,14 @@ count=N``), asserting greedy-token identity to tp=1 and recording which
 param groups sharded (DESIGN.md Sec. 10). With one device the axis
 degenerates to tp=1 only.
 
+A fifth axis (``prefix_sharing``) serves a sequential stream of requests
+behind one shared full-page-aligned prefix with the automatic prefix cache
+on vs off, across execution modes and TP sizes. It asserts the acceptance
+invariant of DESIGN.md Sec. 11: every request after the first drops its
+prefill work positions by exactly the shared full-page token count
+(``prefill_chunk`` divides the shared length, so chunk savings are exact),
+while greedy outputs stay token-identical cache-on vs cache-off.
+
 Emits a JSON comparison to stdout and --out (default
 artifacts/serve_bench.json); see benchmarks/README.md for the schema.
 """
@@ -213,6 +221,82 @@ def _run_tp_axis(model, qparams, reqs):
     return axis
 
 
+def _run_prefix_axis(model, qparams, n_req, page_size=4, shared_pages=4):
+    """Prefix-sharing axis: a sequential stream (each request completes
+    before the next arrives, so every later one can hit the registry)
+    behind one shared prefix of ``shared_pages`` full pages, cache on vs
+    off, for every execution mode and TP size the host offers."""
+    import jax
+
+    from repro.launch.mesh import make_tp_mesh
+    from repro.serve import ContinuousEngine
+
+    shared_len = shared_pages * page_size
+    rng = np.random.default_rng(7)
+    shared = rng.integers(0, 64, (shared_len,)).astype(np.int32)
+    reqs = [(np.concatenate([shared, rng.integers(0, 64, (
+        int(rng.integers(1, 6)),)).astype(np.int32)]),
+        int(rng.integers(4, 10))) for _ in range(n_req)]
+    saved_expect = (n_req - 1) * shared_len
+
+    def serve(prefix_cache, execution, mesh):
+        eng = ContinuousEngine(model, qparams, max_batch=8,
+                               page_size=page_size, num_pages=96, max_seq=36,
+                               prefill_chunk=page_size, execution=execution,
+                               mesh=mesh, prefix_cache=prefix_cache)
+        outs = {}
+        t0 = time.perf_counter()
+        for r in reqs:
+            eng.submit(*r)
+            outs.update(eng.run())
+        return eng, outs, round(time.perf_counter() - t0, 3)
+
+    n_dev = len(jax.devices())
+    axis = {"shared_prefix_tokens": shared_len, "n_requests": n_req,
+            "expected_positions_saved": saved_expect, "configs": {}}
+    baseline = None
+    for tp in (1, 2):
+        if tp > n_dev:
+            continue
+        mesh = make_tp_mesh(tp) if tp > 1 else None
+        for ex in ("simulated", "packed"):
+            if mesh is None:
+                # warm the (model-shared) jit bucket cache once; mesh
+                # engines build engine-local shard_map closures, so a
+                # warm run cannot pre-compile for them — their seconds
+                # include compile and are honesty rows only
+                serve(False, ex, mesh)
+            on, out_on, s_on = serve(True, ex, mesh)
+            off, out_off, s_off = serve(False, ex, mesh)
+            ident = all(np.array_equal(out_on[r], out_off[r])
+                        for r in out_on)
+            entry = {
+                "hits": on.n_prefix_hits,
+                "positions_saved": on.n_prefix_positions_saved,
+                "work_positions_on": on.n_work_positions,
+                "work_positions_off": off.n_work_positions,
+                "seconds_on": s_on, "seconds_off": s_off,
+                "outputs_identical": bool(ident),
+            }
+            # the acceptance invariant: every request after the first skips
+            # exactly the shared full pages (chunk-aligned, so the dispatch
+            # positions drop by the same amount the registry adopted)
+            assert on.n_prefix_hits == n_req - 1, entry
+            assert on.n_prefix_positions_saved == saved_expect, entry
+            assert (off.n_work_positions - on.n_work_positions
+                    == saved_expect), entry
+            if jax.default_backend() != "tpu":
+                assert ident, f"prefix cache changed tokens ({ex}, tp={tp})"
+            if baseline is None:
+                baseline = out_on
+            elif jax.default_backend() != "tpu":
+                for r in baseline:
+                    assert np.array_equal(baseline[r], out_on[r]), \
+                        f"prefix cache diverged across ({ex}, tp={tp})"
+            axis["configs"][f"{ex}_tp{tp}"] = entry
+    return axis
+
+
 def _run_continuous(model, params, reqs, arrivals, warm=True):
     from repro.serve import ContinuousEngine
 
@@ -293,6 +377,15 @@ def main():
     print(f"[serve_bench] tp axis ({tpx['devices']} devices): "
           + " | ".join(f"{k} {v['seconds']}s" for k, v in tpx["sizes"].items())
           + f" | identity {' '.join(ident)}")
+
+    report["prefix_sharing"] = _run_prefix_axis(
+        model, qparams, n_req=4 if args.fast else 8)
+    px = report["prefix_sharing"]
+    for k, v in px["configs"].items():
+        print(f"[serve_bench] prefix axis {k:15s}: hits {v['hits']} | "
+              f"saved {v['positions_saved']} positions | work "
+              f"{v['work_positions_off']} -> {v['work_positions_on']} | "
+              f"identical {v['outputs_identical']}")
 
     os.makedirs(os.path.dirname(args.out), exist_ok=True)
     with open(args.out, "w") as f:

@@ -1,7 +1,9 @@
 from .continuous import ContinuousEngine
 from .engine import ServeEngine
-from .paged_cache import OutOfPages, PagedKVCache
+from .paged_cache import (OutOfPages, PagedKVCache, PageStateError,
+                          PrefixMatch)
 from .scheduler import Request, Scheduler, Sequence
 
-__all__ = ["ContinuousEngine", "OutOfPages", "PagedKVCache", "Request",
-           "Scheduler", "Sequence", "ServeEngine"]
+__all__ = ["ContinuousEngine", "OutOfPages", "PagedKVCache",
+           "PageStateError", "PrefixMatch", "Request", "Scheduler",
+           "Sequence", "ServeEngine"]

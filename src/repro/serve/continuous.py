@@ -17,6 +17,15 @@ the buckets are warm. Greedy sampling happens on host from the returned
 last-token logits, which is what makes output token-identical to the static
 ``ServeEngine`` (same model math, same argmax).
 
+Automatic prefix caching (on by default; DESIGN.md Sec. 11): committed
+full KV pages register under a rolling content hash of their token chain,
+admission longest-prefix-matches new requests against the registry, and
+``fork_request()`` shares a live request's pages n ways by refcount. A
+thousand requests behind one system prompt prefill it once; the metrics
+``n_prefix_hits`` / ``n_prefix_positions_saved`` account for the reuse.
+Greedy outputs are token-identical with the cache on or off — matched
+pages hold exactly the K/V the skipped prefill would have written.
+
 ``mesh=`` runs the whole data plane tensor-parallel (DESIGN.md Sec. 10):
 params partition along N/K/experts/vocab, the page pools by KV head, and
 every step is one ``shard_map`` dispatch with manual psum/all_gather
@@ -34,7 +43,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .paged_cache import PagedKVCache
-from .scheduler import DECODE, Request, Scheduler, Sequence
+from .scheduler import DECODE, FINISHED, Request, Scheduler, Sequence
 
 # Module-level jit, model static (frozen dataclass, hashable): every engine
 # for the same model shares one compile cache, and the pools are donated so
@@ -62,6 +71,7 @@ class ContinuousEngine:
     parallel: object = None
     execution: Optional[str] = None   # "packed" | "simulated" | None=auto
     mesh: object = None               # tensor-parallel device mesh
+    prefix_cache: bool = True         # automatic cross-request prefix reuse
 
     def __post_init__(self):
         from .engine import resolve_execution
@@ -80,7 +90,8 @@ class ContinuousEngine:
             mpps = -(-self.max_seq // self.page_size)
         self.cache = PagedKVCache(
             self.model, num_pages=self.num_pages, page_size=self.page_size,
-            max_seqs=self.max_batch, max_pages_per_seq=mpps)
+            max_seqs=self.max_batch, max_pages_per_seq=mpps,
+            prefix_cache=self.prefix_cache)
         self.scheduler = Scheduler(self.cache, self.max_batch,
                                    self.prefill_chunk)
         if self.mesh is not None:
@@ -97,6 +108,7 @@ class ContinuousEngine:
         self.n_steps = 0
         self.n_tokens_out = 0
         self.n_work_positions = 0     # device token-positions incl. padding
+        self.n_forks = 0              # fork_request children that shared pages
 
     def _init_tensor_parallel(self):
         """Shard params + page pools over ``mesh`` and build the shard_map
@@ -176,6 +188,58 @@ class ContinuousEngine:
             self._run_decode(work[1])
         return True
 
+    def fork_request(self, req_id, n=1, max_new_tokens=None,
+                     eos_id=None) -> List[int]:
+        """Fork an unfinished request into ``n`` independent continuations;
+        returns their new request ids (``collect()`` keys).
+
+        Each child continues from the parent's current position — prompt
+        plus everything sampled so far — with a fresh ``max_new_tokens``
+        budget (the parent's unless overridden) and keeps decoding
+        independently of the parent. A running parent's KV pages are shared
+        by refcount via ``PagedKVCache.fork`` (device copy only for the
+        final partial page); if the pool cannot host a fork right now the
+        child falls back to the waiting queue as a plain resubmission of
+        the parent's tokens, where admission-time prefix matching recovers
+        the sharing — either way no slot or page leaks. Under greedy
+        sampling every child reproduces the parent's own continuation,
+        which is what makes the API testable; it exists for divergent
+        continuations (n-best with different budgets/eos, speculative
+        branches) once non-greedy sampling lands."""
+        seq = self._seqs.get(req_id)
+        if seq is None:
+            raise KeyError(f"unknown request id {req_id}")
+        if seq.state == FINISHED:
+            raise ValueError(f"request {req_id} already finished; its pages "
+                             "are released (resubmit its tokens instead)")
+        budget = (seq.req.max_new_tokens if max_new_tokens is None
+                  else int(max_new_tokens))
+        # same admission-control gate as submit(): a child whose fork-point
+        # prompt plus fresh budget can never fit would otherwise be admitted
+        # on pool headroom alone and self-preempt forever at the
+        # max_pages_per_seq reserve, livelocking the queue behind it
+        why = self.cache.capacity_error(len(seq.tokens) + budget)
+        if why is not None:
+            raise ValueError(f"fork of request {req_id}: {why}")
+        new_ids: List[int] = []
+        for _ in range(int(n)):
+            new_id = self._next_id
+            self._next_id += 1
+            req = Request(new_id, seq.tokens.copy(), budget,
+                          seq.req.eos_id if eos_id is None else eos_id)
+            child = Sequence(req)
+            dst = self.cache.fork(seq.slot) if seq.slot >= 0 else None
+            if dst is not None:
+                child.slot = dst
+                child.cache_len = int(self.cache.seq_lens[dst])
+                self.scheduler.running.append(child)
+                self.n_forks += 1
+            else:
+                self.scheduler.waiting.append(child)
+            self._seqs[new_id] = child
+            new_ids.append(new_id)
+        return new_ids
+
     def collect(self) -> Dict[int, np.ndarray]:
         """Drain outputs finished since the last ``collect()``: a dict
         ``req_id -> int32 generated tokens`` (prompt not included). Each
@@ -183,6 +247,18 @@ class ContinuousEngine:
         held, never dropped."""
         out, self._finished = self._finished, {}
         return out
+
+    # -- metrics -------------------------------------------------------------
+    @property
+    def n_prefix_hits(self):
+        """Admissions that longest-prefix-matched the page registry."""
+        return self.scheduler.n_prefix_hits
+
+    @property
+    def n_prefix_positions_saved(self):
+        """Token positions adopted from the prefix cache instead of being
+        prefilled (``cache_len`` started at the matched page boundary)."""
+        return self.scheduler.n_prefix_tokens
 
     def run(self):
         """Drive until all submitted work is complete; return all outputs."""
@@ -206,6 +282,7 @@ class ContinuousEngine:
         logits = self._dispatch([seq.slot], tokens, q_pos, kv_lens)
         seq.cache_len = start + n
         self.cache.commit(seq.slot, seq.cache_len)
+        self.cache.register_prefix(seq.slot, seq.tokens[:seq.cache_len])
         if seq.cache_len == len(seq.tokens):        # prompt fully in cache
             if not seq.is_done():                   # e.g. max_new_tokens=0
                 self._sample_and_advance(seq, logits[0])
@@ -229,6 +306,11 @@ class ContinuousEngine:
         for i, seq in enumerate(seqs):
             seq.cache_len = seq.n_total
             self.cache.commit(seq.slot, seq.cache_len)
+            # decode advances one position per step, so a page fills (and
+            # becomes registrable) exactly on the boundary commits
+            if self.prefix_cache and seq.cache_len % self.page_size == 0:
+                self.cache.register_prefix(seq.slot,
+                                           seq.tokens[:seq.cache_len])
             self._sample_and_advance(seq, logits[i])
             self._maybe_finish(seq)
 

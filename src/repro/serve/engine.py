@@ -10,8 +10,11 @@ produce identical greedy tokens (DESIGN.md Sec. 9).
 
 This is the non-batched (fixed batch, lockstep decode) fallback; production
 traffic goes through ``serve.continuous.ContinuousEngine``, which adds
-request scheduling and a paged KV cache (DESIGN.md §8). It also covers the
-decoder-only architectures paging does not (ssm/xlstm recurrent state).
+request scheduling, a paged KV cache (DESIGN.md §8), and automatic
+cross-request prefix caching + ``fork_request`` page sharing (§11) — none
+of which exist here: every ``generate`` call prefills its full prompts. It
+also covers the decoder-only architectures paging does not (ssm/xlstm
+recurrent state).
 """
 from __future__ import annotations
 

@@ -12,17 +12,32 @@ Page 0 is reserved as a scratch page: padding rows of the packed batch
 scatter their (garbage) K/V there, so the jitted step needs no masking
 branches. The allocator never hands page 0 to a sequence.
 
+**Automatic prefix cache** (DESIGN.md Sec. 11). With ``prefix_cache=True``
+the allocator keeps a registry of committed, immutable *full* pages keyed
+by a rolling content hash of the token chain that produced them (the K/V
+of page *i* depends on every token before it, so the hash chains:
+``h_i = H(h_{i-1} || tokens[i*ps:(i+1)*ps])``). A registered page whose
+refcount drops to zero is *cached-but-alive*: it moves to an LRU list
+instead of the free list, and is reclaimed (unregistered + freed) only
+under pool pressure — always before any live sequence is preempted. New
+sequences longest-prefix-match the registry at admission and adopt the
+matched pages by refcount bump, so chunked prefill skips the shared
+prefix entirely.
+
 Tensor parallelism (DESIGN.md Sec. 10) never touches this control plane:
-page ids, block tables, lengths and refcounts are head-agnostic. Under a
-TP mesh the engine re-homes ``pools`` with a head-sharded NamedSharding
-(leaf dim 3, the KV-head dim, split over the model axis) and every device
-holds the *same pages* for *its* heads — one block-table row addresses all
-shards at once, and fork/preempt/commit work unchanged.
+page ids, block tables, lengths, refcounts and the prefix registry are
+head-agnostic. Under a TP mesh the engine re-homes ``pools`` with a
+head-sharded NamedSharding (leaf dim 3, the KV-head dim, split over the
+model axis) and every device holds the *same pages* for *its* heads — one
+block-table row addresses all shards at once, and fork/preempt/commit/
+prefix-adopt work unchanged.
 """
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import math
+from collections import OrderedDict
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -34,6 +49,32 @@ class OutOfPages(Exception):
     """Raised when a reservation cannot be satisfied (caller preempts)."""
 
 
+class PageStateError(RuntimeError):
+    """An allocator lifecycle invariant was violated (double release,
+    commit past the reservation, adopt into a dirty slot). Unlike the bare
+    ``assert`` this replaced, it survives ``python -O`` — silently
+    corrupting the free list is strictly worse than failing loudly."""
+
+
+def _chain_digest(prev: bytes, page_tokens: np.ndarray) -> bytes:
+    """Rolling hash step: digest of (parent digest, this page's tokens)."""
+    h = hashlib.blake2b(prev, digest_size=16)
+    h.update(np.ascontiguousarray(page_tokens, np.int32).tobytes())
+    return h.digest()
+
+
+@dataclasses.dataclass(frozen=True)
+class PrefixMatch:
+    """A longest-prefix registry hit: ``pages`` (and their chain digests)
+    cover the first ``n_tokens`` positions; ``n_unreferenced`` of them are
+    currently LRU-cached (refcount 0) and leave the reclaimable set when
+    adopted."""
+    pages: Tuple[int, ...]
+    digests: Tuple[bytes, ...]
+    n_tokens: int
+    n_unreferenced: int
+
+
 class PagedKVCache:
     """Host-side page allocator + device page pools.
 
@@ -42,19 +83,24 @@ class PagedKVCache:
     has actually written device-side, ``release`` returns a slot's pages in
     reverse order (LIFO reuse keeps prefixes warm), and ``fork`` shares
     full pages by refcount while copying only the final partial page.
+    With ``prefix_cache=True`` a released page that is registered in the
+    prefix registry parks on an LRU list instead of the free list;
+    ``reserve``/``fork`` reclaim from that list before reporting the pool
+    exhausted, so cached pages never cause a preemption.
     ``pools`` is an opaque device pytree owned by the jitted serving step;
     this class never reads it, only swaps it wholesale (fork's page copy,
     the engine's sharded re-homing).
     """
 
     def __init__(self, model, *, num_pages, page_size, max_seqs,
-                 max_pages_per_seq=None):
+                 max_pages_per_seq=None, prefix_cache=False):
         if num_pages < 2:
             raise ValueError("need >= 2 pages (page 0 is reserved scratch)")
         self.page_size = int(page_size)
         self.num_pages = int(num_pages)
         self.max_seqs = int(max_seqs)
         self.max_pages_per_seq = int(max_pages_per_seq or num_pages - 1)
+        self.prefix_cache = bool(prefix_cache)
         self.pools = model.init_paged_pools(num_pages, page_size)
         # host metadata
         self.block_tables = np.zeros((max_seqs, self.max_pages_per_seq),
@@ -65,6 +111,25 @@ class PagedKVCache:
         self.ref_counts[0] = 1                    # scratch page, never freed
         self._free = list(range(num_pages - 1, 0, -1))    # LIFO free list
         self._free_slots = list(range(max_seqs - 1, -1, -1))
+        # prefix registry: digest <-> page (one-to-one), LRU of refcount-0
+        # registered pages (insertion order == eviction order)
+        self._registry: Dict[bytes, int] = {}
+        self._page_digest: Dict[int, bytes] = {}
+        self._lru: "OrderedDict[int, None]" = OrderedDict()
+        self._slot_digests: List[List[bytes]] = [[] for _ in range(max_seqs)]
+        self.n_cache_evictions = 0
+        # bumped whenever the digest->page mapping changes (register /
+        # reclaim); lets callers memoize match_prefix results — an epoch
+        # match can only go stale in LRU-membership (avail accounting),
+        # never in page validity, and reserve-time OutOfPages + preemption
+        # already backstop optimistic admission
+        self.registry_epoch = 0
+        # block-table row upload cache: slot versions bump on any table
+        # mutation, so an unchanged (slots, tables) dispatch reuses the
+        # already-transferred device rows instead of re-uploading
+        self._versions = np.zeros((max_seqs,), np.int64)
+        self._rows_cache: Dict[Tuple[int, ...],
+                               Tuple[Tuple[int, ...], jnp.ndarray]] = {}
         donate = (0,) if jax.default_backend() in ("tpu", "gpu") else ()
         self._copy_page = jax.jit(self._copy_page_impl, donate_argnums=donate)
 
@@ -72,6 +137,16 @@ class PagedKVCache:
     @property
     def n_free_pages(self):
         return len(self._free)
+
+    @property
+    def n_cached_pages(self):
+        """Registered pages no sequence references (reclaimable on demand)."""
+        return len(self._lru)
+
+    @property
+    def n_available_pages(self):
+        """Pages a reservation can obtain: free now + reclaimable LRU."""
+        return len(self._free) + len(self._lru)
 
     @property
     def n_free_slots(self):
@@ -82,8 +157,23 @@ class PagedKVCache:
 
     def fits(self, n_tokens):
         """Whole-sequence capacity check (used at submit/admission time)."""
+        return self.capacity_error(n_tokens) is None
+
+    def capacity_error(self, n_tokens) -> Optional[str]:
+        """Why ``n_tokens`` can never fit, or None if it can. Names every
+        limit the request actually exceeds — a request bounded by
+        ``max_pages_per_seq`` must not be told the pool is too small."""
         need = self.pages_for(n_tokens)
-        return need <= self.max_pages_per_seq and need <= self.num_pages - 1
+        limits = []
+        if need > self.max_pages_per_seq:
+            limits.append(f"max_pages_per_seq={self.max_pages_per_seq}")
+        if need > self.num_pages - 1:
+            limits.append(f"the page pool ({self.num_pages - 1} usable "
+                          f"pages x {self.page_size})")
+        if not limits:
+            return None
+        return (f"{n_tokens} tokens need {need} pages, exceeding "
+                + " and ".join(limits))
 
     # -- slots -------------------------------------------------------------
     def alloc_slot(self) -> Optional[int]:
@@ -93,31 +183,63 @@ class PagedKVCache:
         self.seq_pages[slot] = []
         self.seq_lens[slot] = 0
         self.block_tables[slot] = 0
+        self._slot_digests[slot] = []
+        self._versions[slot] += 1
         return slot
 
     def release(self, slot):
-        """Free the slot: decref every page, returning dead pages to the
-        free list (reverse order so LIFO reuse stays prefix-friendly)."""
+        """Free the slot: decref every page. Dead pages return to the free
+        list (reverse order so LIFO reuse stays prefix-friendly) — unless
+        registered in the prefix cache, in which case they park on the LRU
+        list, content intact, until reclaimed under pressure."""
         for page in reversed(self.seq_pages[slot]):
+            if self.ref_counts[page] <= 0:
+                raise PageStateError(
+                    f"release(slot={slot}): page {page} refcount "
+                    f"{int(self.ref_counts[page])} already zero "
+                    "(double release?)")
             self.ref_counts[page] -= 1
-            assert self.ref_counts[page] >= 0
             if self.ref_counts[page] == 0:
-                self._free.append(page)
+                if page in self._page_digest:
+                    self._lru[page] = None       # newest at the end
+                else:
+                    self._free.append(page)
         self.seq_pages[slot] = []
         self.seq_lens[slot] = 0
         self.block_tables[slot] = 0
+        self._slot_digests[slot] = []
+        self._versions[slot] += 1
         self._free_slots.append(slot)
 
     # -- pages -------------------------------------------------------------
+    def _reclaim(self, n) -> int:
+        """Evict up to ``n`` LRU-cached pages back onto the free list
+        (oldest first); returns how many were reclaimed."""
+        freed = 0
+        while freed < n and self._lru:
+            page, _ = self._lru.popitem(last=False)
+            digest = self._page_digest.pop(page)
+            del self._registry[digest]
+            self._free.append(page)
+            self.n_cache_evictions += 1
+            freed += 1
+        if freed:
+            self.registry_epoch += 1
+        return freed
+
     def reserve(self, slot, n_tokens):
         """Grow ``slot``'s block table to cover ``n_tokens``. All-or-nothing:
-        raises OutOfPages without partial allocation if the pool is short."""
+        raises OutOfPages without partial allocation if the pool is short
+        (after reclaiming LRU-cached prefix pages, which are always spent
+        before the caller resorts to preempting a live sequence)."""
         need = self.pages_for(n_tokens) - len(self.seq_pages[slot])
         if need <= 0:
             return
         if self.pages_for(n_tokens) > self.max_pages_per_seq:
             raise OutOfPages(f"slot {slot}: {n_tokens} tokens exceed "
                              f"max_pages_per_seq={self.max_pages_per_seq}")
+        if need > len(self._free):
+            self._reclaim(need - len(self._free))
         if need > len(self._free):
             raise OutOfPages(f"slot {slot}: need {need} pages, "
                              f"{len(self._free)} free")
@@ -126,24 +248,102 @@ class PagedKVCache:
             self.ref_counts[page] += 1
             self.block_tables[slot, len(self.seq_pages[slot])] = page
             self.seq_pages[slot].append(page)
+        self._versions[slot] += 1
 
     def commit(self, slot, n_tokens):
         """Record that ``n_tokens`` of ``slot`` are now written device-side."""
-        assert self.pages_for(n_tokens) <= len(self.seq_pages[slot])
+        if self.pages_for(n_tokens) > len(self.seq_pages[slot]):
+            raise PageStateError(
+                f"commit(slot={slot}, n_tokens={n_tokens}): only "
+                f"{len(self.seq_pages[slot])} pages reserved "
+                f"({len(self.seq_pages[slot]) * self.page_size} tokens)")
         self.seq_lens[slot] = n_tokens
+
+    # -- prefix registry ---------------------------------------------------
+    def register_prefix(self, slot, tokens):
+        """Register ``slot``'s committed full pages under the rolling hash
+        of ``tokens`` (the committed token chain, ``tokens[:seq_lens]``).
+        Idempotent and incremental: the per-slot digest chain is extended
+        only for newly-filled pages, so per-step decode calls are O(new
+        pages), not O(sequence length). First-writer-wins: a digest already
+        mapping to an equal-content page is left alone."""
+        if not self.prefix_cache:
+            return
+        ps = self.page_size
+        tokens = np.asarray(tokens, np.int32).reshape(-1)
+        n_full = min(len(tokens) // ps, len(self.seq_pages[slot]))
+        digests = self._slot_digests[slot]
+        prev = digests[-1] if digests else b""
+        for i in range(len(digests), n_full):
+            prev = _chain_digest(prev, tokens[i * ps:(i + 1) * ps])
+            digests.append(prev)
+            page = self.seq_pages[slot][i]
+            if prev not in self._registry and page not in self._page_digest:
+                self._registry[prev] = page
+                self._page_digest[page] = prev
+                self.registry_epoch += 1
+
+    def match_prefix(self, tokens, max_tokens=None) -> Optional[PrefixMatch]:
+        """Longest-prefix registry lookup for a token chain. Pure (no
+        allocator mutation); returns None when disabled or nothing matches.
+        ``max_tokens`` caps the match (admission passes ``len(tokens)-1``
+        so at least one position is always left to prefill — the sampler
+        needs its logits)."""
+        if not self.prefix_cache or not self._registry:
+            return None
+        ps = self.page_size
+        tokens = np.asarray(tokens, np.int32).reshape(-1)
+        limit = len(tokens) if max_tokens is None else min(len(tokens),
+                                                           int(max_tokens))
+        n_full = min(limit // ps, self.max_pages_per_seq)
+        pages, digests = [], []
+        prev = b""
+        for i in range(n_full):
+            prev = _chain_digest(prev, tokens[i * ps:(i + 1) * ps])
+            page = self._registry.get(prev)
+            if page is None:
+                break
+            pages.append(page)
+            digests.append(prev)
+        if not pages:
+            return None
+        n_unref = sum(1 for p in pages if p in self._lru)
+        return PrefixMatch(tuple(pages), tuple(digests),
+                           len(pages) * ps, n_unref)
+
+    def adopt_prefix(self, slot, match: PrefixMatch):
+        """Bump the matched pages into ``slot``'s block table and record
+        their content as committed (it already is, device-side). The slot
+        must be freshly allocated — adopted pages are always a sequence's
+        first pages (position 0 onward), by construction of the hash chain.
+        """
+        if self.seq_pages[slot]:
+            raise PageStateError(f"adopt_prefix(slot={slot}): slot already "
+                                 f"holds {len(self.seq_pages[slot])} pages")
+        for i, page in enumerate(match.pages):
+            self._lru.pop(page, None)            # referenced again
+            self.ref_counts[page] += 1
+            self.block_tables[slot, i] = page
+            self.seq_pages[slot].append(page)
+        self._slot_digests[slot] = list(match.digests)
+        self.seq_lens[slot] = match.n_tokens
+        self._versions[slot] += 1
 
     # -- prefix sharing ----------------------------------------------------
     def fork(self, src_slot) -> Optional[int]:
         """Fork ``src_slot``: full pages are shared by refcount; a partial
         final page is copied device-side (copy-on-write at fork time — full
-        pages are never written again, so sharing them is safe)."""
+        pages are never written again, so sharing them is safe). Returns
+        None, with no slot or page leaked, when slots are exhausted or the
+        partial-page copy cannot get a page even after reclaiming the
+        prefix-cache LRU."""
         dst = self.alloc_slot()
         if dst is None:
             return None
         n = int(self.seq_lens[src_slot])
         n_full = n // self.page_size
         partial = n % self.page_size > 0
-        if partial and not self._free:
+        if partial and not self._free and not self._reclaim(1):
             self.release(dst)
             return None
         try:
@@ -162,6 +362,8 @@ class PagedKVCache:
             self.release(dst)
             raise
         self.seq_lens[dst] = n
+        self._slot_digests[dst] = self._slot_digests[src_slot][:n_full]
+        self._versions[dst] += 1
         return dst
 
     @staticmethod
@@ -174,9 +376,22 @@ class PagedKVCache:
     # -- packed-batch views -------------------------------------------------
     def table_rows(self, slots):
         """Device block-table rows for the given slots, zero-padded to the
-        packed batch size implied by ``len(slots)`` (-1 slots = pad rows)."""
-        rows = np.zeros((len(slots), self.max_pages_per_seq), np.int32)
-        for i, s in enumerate(slots):
+        packed batch size implied by ``len(slots)`` (-1 slots = pad rows).
+        Memoized on (slots, per-slot table versions): the steady-state
+        decode loop re-dispatches the same rows every step, so the
+        (B, max_pages_per_seq) host build + transfer happens only when a
+        slot's table actually changed."""
+        key = tuple(int(s) for s in slots)
+        vers = tuple(int(self._versions[s]) if s >= 0 else -1 for s in key)
+        hit = self._rows_cache.get(key)
+        if hit is not None and hit[0] == vers:
+            return hit[1]
+        rows = np.zeros((len(key), self.max_pages_per_seq), np.int32)
+        for i, s in enumerate(key):
             if s >= 0:
                 rows[i] = self.block_tables[s]
-        return jnp.asarray(rows)
+        dev = jnp.asarray(rows)
+        if len(self._rows_cache) >= 256:          # bound stale batch shapes
+            self._rows_cache.clear()
+        self._rows_cache[key] = (vers, dev)
+        return dev

@@ -16,7 +16,15 @@ Policy choices (deliberately simple and deterministic; see DESIGN.md §8):
   * Preemption by recompute: when decode needs a page and the pool is dry,
     the youngest running sequence is evicted — its pages are freed and it
     re-enters the waiting queue (front) with its generated-so-far tokens
-    appended to the prompt, so greedy output is unchanged.
+    appended to the prompt, so greedy output is unchanged. With the prefix
+    cache on, ``reserve`` reclaims LRU-cached (unreferenced) prefix pages
+    before ever reporting the pool dry, so cached pages are always spent
+    before a live sequence is preempted — and a preempted sequence usually
+    re-admits straight onto its own still-cached pages.
+  * Automatic prefix caching (DESIGN.md Sec. 11): admission longest-prefix
+    matches the page registry and adopts hits by refcount bump, so a
+    request sharing a 2k-token system prompt with an earlier one skips
+    that prefill entirely.
 """
 from __future__ import annotations
 
@@ -49,6 +57,7 @@ class Sequence:
         self.cache_len = 0        # tokens written to the KV pool
         self.state = PREFILL
         self.n_preempted = 0
+        self._prefix_match = None   # (registry_epoch, match) memo
 
     @property
     def tokens(self) -> np.ndarray:
@@ -79,15 +88,15 @@ class Scheduler:
         self.running: List[Sequence] = []
         self._last_was_prefill = False
         self.n_preemptions = 0
+        self.n_prefix_hits = 0        # admissions that matched the registry
+        self.n_prefix_tokens = 0      # positions adopted instead of prefilled
 
     # -- queue entry points -------------------------------------------------
     def submit(self, request: Request) -> Sequence:
         total = len(request.prompt) + request.max_new_tokens
-        if not self.cache.fits(total):
-            raise ValueError(
-                f"request {request.req_id}: {total} tokens can never fit "
-                f"the page pool ({self.cache.num_pages - 1} usable pages x "
-                f"{self.cache.page_size})")
+        why = self.cache.capacity_error(total)
+        if why is not None:        # names the limit that actually rejected
+            raise ValueError(f"request {request.req_id}: {why}")
         seq = Sequence(request)
         self.waiting.append(seq)
         return seq
@@ -101,20 +110,51 @@ class Scheduler:
         """FIFO admission while slots, batch room, and pool headroom last.
         Headroom check is against the *whole* remaining sequence so an
         admitted sequence only ever blocks on pages another sequence can
-        release (preemption handles that case)."""
+        release (preemption handles that case); it counts LRU-cached prefix
+        pages as available, since ``reserve`` reclaims them on demand.
+
+        Each admitted sequence longest-prefix-matches the prefix registry
+        first: matched pages are adopted by refcount bump and ``cache_len``
+        starts at the matched boundary, so chunked prefill skips them. The
+        match is capped at ``len(tokens) - 1`` — the last position must be
+        prefilled for real so the sampler has logits to advance on."""
         while (self.waiting and len(self.running) < self.max_batch
                and self.cache.n_free_slots > 0):
             seq = self.waiting[0]
+            toks = seq.tokens
+            match = self._match_for(seq, toks)
+            n_hit = len(match.pages) if match else 0
             need = self.cache.pages_for(
-                len(seq.tokens) + seq.req.max_new_tokens
-                - len(seq.generated))
-            if need > self.cache.n_free_pages:
+                len(toks) + seq.req.max_new_tokens
+                - len(seq.generated)) - n_hit
+            avail = self.cache.n_available_pages - (
+                match.n_unreferenced if match else 0)
+            if need > avail:
                 break
             self.waiting.popleft()
             seq.slot = self.cache.alloc_slot()
             seq.cache_len = 0
+            if match is not None:
+                self.cache.adopt_prefix(seq.slot, match)
+                seq.cache_len = match.n_tokens
+                self.n_prefix_hits += 1
+                self.n_prefix_tokens += match.n_tokens
             seq.state = PREFILL
             self.running.append(seq)
+
+    def _match_for(self, seq, toks):
+        """match_prefix memoized per sequence on the registry epoch: a
+        page-blocked head-of-queue request would otherwise re-hash its
+        whole prompt on every schedule() call while it waits. The memo can
+        only go stale in LRU-membership accounting (registration state is
+        epoch-versioned), which admission treats as advisory anyway —
+        reserve-time OutOfPages and preemption backstop it."""
+        epoch = self.cache.registry_epoch
+        if seq._prefix_match is not None and seq._prefix_match[0] == epoch:
+            return seq._prefix_match[1]
+        match = self.cache.match_prefix(toks, max_tokens=len(toks) - 1)
+        seq._prefix_match = (epoch, match)
+        return match
 
     def _preempt(self, victim):
         """Evict ``victim`` (recompute-on-resume): free its pages and push it
@@ -124,6 +164,7 @@ class Scheduler:
         victim.cache_len = 0
         victim.state = PREFILL
         victim.n_preempted += 1
+        victim._prefix_match = None   # tokens grew since the last match
         self.running.remove(victim)
         self.waiting.appendleft(victim)
         self.n_preemptions += 1

@@ -2,6 +2,8 @@
 import numpy as np
 import jax.numpy as jnp
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import assume, given, settings, strategies as st
 
 from repro.core import (grouping_cost, group_sse, lambda_bounds,

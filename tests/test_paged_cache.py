@@ -8,7 +8,7 @@ import pytest
 
 from repro.configs import smoke_config
 from repro.models import Model
-from repro.serve import OutOfPages, PagedKVCache
+from repro.serve import OutOfPages, PagedKVCache, PageStateError
 
 
 @pytest.fixture(scope="module")
@@ -106,6 +106,29 @@ def test_fork_exact_page_boundary_shares_everything(model):
     dst = c.fork(src)
     assert c.seq_pages[dst] == c.seq_pages[src]
     assert c.n_free_pages == free_before  # nothing copied, nothing allocated
+
+
+def test_commit_past_reservation_raises(model):
+    """Lifecycle invariants raise real exceptions (not ``assert``, which
+    vanishes under ``python -O`` and silently corrupts the free list)."""
+    c = make_cache(model)
+    s = c.alloc_slot()
+    c.reserve(s, 4)                      # one page
+    with pytest.raises(PageStateError):
+        c.commit(s, 5)                   # 5 tokens > 1 reserved page
+    c.commit(s, 4)                       # the reserved extent is fine
+
+
+def test_double_release_raises(model):
+    c = make_cache(model)
+    s = c.alloc_slot()
+    c.reserve(s, 4)
+    page = c.seq_pages[s][0]
+    c.release(s)
+    # re-enter the stale slot state by hand (simulates a control-plane bug)
+    c.seq_pages[s] = [page]
+    with pytest.raises(PageStateError):
+        c.release(s)
 
 
 def test_table_rows_pads_inactive(model):

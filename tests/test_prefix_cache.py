@@ -1,0 +1,349 @@
+"""Automatic prefix cache: registry hashing, LRU eviction, admission hits,
+fork_request sharing, and prefix-on/off greedy identity (DESIGN.md Sec. 11).
+"""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import smoke_config
+from repro.launch.mesh import make_tp_mesh
+from repro.models import Model
+from repro.serve import ContinuousEngine, PagedKVCache, PageStateError
+
+PS = 4                                   # page size used throughout
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = smoke_config("internlm2-1.8b")
+    cfg = dataclasses.replace(cfg, vocab_size=64, vocab_round=64)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    params = jax.tree_util.tree_map(lambda p: p.astype(jnp.float32), params)
+    return model, params
+
+
+def make_cache(model, **kw):
+    kw.setdefault("num_pages", 16)
+    kw.setdefault("page_size", PS)
+    kw.setdefault("max_seqs", 4)
+    kw.setdefault("prefix_cache", True)
+    return PagedKVCache(model, **kw)
+
+
+def toks(*vals):
+    return np.asarray(vals, np.int32)
+
+
+# ---------------------------------------------------------------------------
+# registry: rolling hash, LRU lifecycle, reclaim ordering
+# ---------------------------------------------------------------------------
+
+def test_match_requires_identical_chain(setup):
+    """Page i's K/V depends on every token before it, so the hash chains:
+    an identical page-1 behind a different page-0 must not match."""
+    model, _ = setup
+    c = make_cache(model)
+    s = c.alloc_slot()
+    chain = toks(*range(10))             # 2 full pages + partial
+    c.reserve(s, 10)
+    c.commit(s, 10)
+    c.register_prefix(s, chain)
+
+    m = c.match_prefix(chain)
+    assert m is not None and m.n_tokens == 8
+    assert list(m.pages) == c.seq_pages[s][:2]
+    # shared page-0 chain, divergent page-1 -> one page
+    m1 = c.match_prefix(toks(*range(4), 50, 51, 52, 53))
+    assert m1 is not None and m1.n_tokens == 4
+    # same page-1 tokens behind a different page-0 -> nothing
+    assert c.match_prefix(toks(9, 9, 9, 9, *range(4, 8))) is None
+    # fewer than one full page can never match
+    assert c.match_prefix(chain, max_tokens=3) is None
+
+
+def test_release_parks_registered_pages_and_adopt_revives(setup):
+    model, _ = setup
+    c = make_cache(model)
+    s = c.alloc_slot()
+    chain = toks(*range(10))
+    c.reserve(s, 10)
+    c.commit(s, 10)
+    c.register_prefix(s, chain)
+    full_pages = list(c.seq_pages[s][:2])
+    free_before = c.n_free_pages
+    c.release(s)
+    # full registered pages park in the LRU; the partial page is plain-freed
+    assert c.n_cached_pages == 2
+    assert c.n_free_pages == free_before + 1
+    assert (c.ref_counts[full_pages] == 0).all()
+
+    d = c.alloc_slot()
+    m = c.match_prefix(chain)
+    assert m.n_unreferenced == 2
+    c.adopt_prefix(d, m)
+    assert c.n_cached_pages == 0
+    assert (c.ref_counts[full_pages] == 1).all()
+    assert c.seq_pages[d] == full_pages
+    assert int(c.seq_lens[d]) == 8       # committed without any prefill
+    c.release(d)
+    assert c.n_cached_pages == 2         # back to cached-but-alive
+
+
+def test_reserve_reclaims_lru_before_out_of_pages(setup):
+    """Cached pages are reclaimable capacity: a reservation that would
+    otherwise raise OutOfPages evicts LRU pages instead (tail of the chain
+    first, so surviving entries still longest-prefix match)."""
+    model, _ = setup
+    c = make_cache(model, num_pages=6)   # 5 usable
+    s = c.alloc_slot()
+    chain = toks(*range(16))
+    c.reserve(s, 16)                     # all 4 full pages + none left over
+    c.commit(s, 16)
+    c.register_prefix(s, chain)
+    c.release(s)
+    assert c.n_cached_pages == 4 and c.n_free_pages == 1
+    assert c.n_available_pages == 5
+
+    d = c.alloc_slot()
+    c.reserve(d, 12)                     # needs 3: 1 free + 2 reclaimed
+    assert c.n_cache_evictions == 2
+    # eviction came off the chain tail: the head still matches
+    m = c.match_prefix(chain)
+    assert m is not None and m.n_tokens == 8
+
+
+def test_releasing_shared_prefix_keeps_referenced_pages_alive(setup):
+    """Evicting a sequence whose pages are prefix-shared must not free (or
+    LRU) pages another sequence still references."""
+    model, _ = setup
+    c = make_cache(model)
+    s = c.alloc_slot()
+    chain = toks(*range(8))
+    c.reserve(s, 8)
+    c.commit(s, 8)
+    c.register_prefix(s, chain)
+    d = c.alloc_slot()
+    c.adopt_prefix(d, c.match_prefix(chain))
+    pages = list(c.seq_pages[s])
+    assert (c.ref_counts[pages] == 2).all()
+
+    c.release(s)                         # the original holder goes away
+    assert (c.ref_counts[pages] == 1).all()
+    assert c.n_cached_pages == 0         # still referenced: not reclaimable
+    assert not set(pages) & set(c._free)
+    c.release(d)
+    assert c.n_cached_pages == 2         # now cached-but-alive
+
+
+def test_fork_under_pressure_returns_none_without_leaking(setup):
+    """fork() needing a partial-page copy with a dry free list (and nothing
+    reclaimable) must return None leaving slots, refcounts and the free
+    list exactly as they were."""
+    model, _ = setup
+    c = make_cache(model, num_pages=4)   # 3 usable
+    s = c.alloc_slot()
+    c.reserve(s, 10)                     # 2 full + 1 partial: pool exhausted
+    c.commit(s, 10)
+    assert c.n_free_pages == 0 and c.n_cached_pages == 0
+    slots_before = c.n_free_slots
+    refs_before = c.ref_counts.copy()
+    assert c.fork(s) is None
+    assert c.n_free_slots == slots_before
+    np.testing.assert_array_equal(c.ref_counts, refs_before)
+    assert c.n_free_pages == 0
+
+
+def test_table_rows_memoized_until_dirty(setup):
+    model, _ = setup
+    c = make_cache(model)
+    s = c.alloc_slot()
+    c.reserve(s, 6)
+    r1 = c.table_rows([s, -1])
+    assert c.table_rows([s, -1]) is r1   # clean slot: no re-upload
+    c.reserve(s, 10)                     # new page -> dirty
+    r2 = c.table_rows([s, -1])
+    assert r2 is not r1
+    assert int(np.asarray(r2)[0, 2]) == c.seq_pages[s][2]
+    d = c.alloc_slot()                   # unrelated slot mutation
+    assert c.table_rows([s, -1]) is r2
+    c.release(s)                         # released slot invalidates its rows
+    assert c.table_rows([s, -1]) is not r2
+
+
+# ---------------------------------------------------------------------------
+# engine: admission hits, metrics, on/off identity, fork_request
+# ---------------------------------------------------------------------------
+
+def _engine(setup, prefix_cache, mesh=None, **kw):
+    model, params = setup
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("page_size", PS)
+    kw.setdefault("num_pages", 64)
+    kw.setdefault("max_seq", 40)
+    kw.setdefault("prefill_chunk", PS)
+    return ContinuousEngine(model, params, prefix_cache=prefix_cache,
+                            mesh=mesh, **kw)
+
+
+def _shared_prefix_requests(rng, n, shared_len=4 * PS):
+    shared = rng.integers(0, 64, (shared_len,)).astype(np.int32)
+    return [(np.concatenate([shared,
+                             rng.integers(0, 64, (int(rng.integers(1, 5)),))
+                             .astype(np.int32)]), 6) for _ in range(n)]
+
+
+def _serve_sequential(eng, reqs):
+    """Each request runs to completion before the next arrives, so every
+    later request can hit pages the earlier ones registered."""
+    outs = {}
+    for r in reqs:
+        eng.submit(*r)
+        outs.update(eng.run())
+    return outs
+
+
+def test_admission_hit_skips_shared_prefill(setup, rng):
+    """The acceptance invariant at test scale: the second request's prefill
+    drops by exactly the shared full-page token count (prefill_chunk ==
+    page_size, so chunks align with the matched boundary), and greedy
+    outputs are identical with the cache on or off."""
+    reqs = _shared_prefix_requests(rng, 3)
+    on = _engine(setup, True)
+    out_on = _serve_sequential(on, reqs)
+    off = _engine(setup, False)
+    out_off = _serve_sequential(off, reqs)
+
+    assert on.n_prefix_hits == 2
+    assert on.n_prefix_positions_saved == 2 * 4 * PS
+    assert off.n_work_positions - on.n_work_positions == 2 * 4 * PS
+    assert sorted(out_on) == sorted(out_off)
+    for rid in out_on:
+        np.testing.assert_array_equal(out_on[rid], out_off[rid])
+
+
+def test_identical_prompt_match_capped_before_last_token(setup, rng):
+    """A byte-identical repeat prompt may match at most len-1 positions —
+    the final position must be prefilled for real to produce logits."""
+    prompt = rng.integers(0, 64, (3 * PS,)).astype(np.int32)
+    eng = _engine(setup, True)
+    out = _serve_sequential(eng, [(prompt, 5), (prompt, 5)])
+    # floor((12-1)/4) = 2 full pages adopted, 4 positions prefilled
+    assert eng.n_prefix_hits == 1
+    assert eng.n_prefix_positions_saved == 2 * PS
+    np.testing.assert_array_equal(out[0], out[1])
+
+
+def test_preemption_with_prefix_cache_token_identical(setup, rng):
+    """A pool sized to force preemption, cache on: reclaim happens before
+    eviction, preempted sequences re-admit (often onto their own cached
+    pages), and outputs still match the uncontended no-cache run."""
+    reqs = [(rng.integers(0, 64, (6,)).astype(np.int32), 8)
+            for _ in range(2)]
+    ref = _engine(setup, False, num_pages=64, page_size=2, prefill_chunk=4,
+                  max_seq=None)
+    for r in reqs:
+        ref.submit(*r)
+    ref_out = ref.run()
+
+    eng = _engine(setup, True, num_pages=11, page_size=2, prefill_chunk=4,
+                  max_seq=None)
+    for r in reqs:
+        eng.submit(*r)
+    out = eng.run()
+    assert eng.scheduler.n_preemptions > 0, "pool sized to force preemption"
+    for rid in ref_out:
+        np.testing.assert_array_equal(out[rid], ref_out[rid])
+    c = eng.cache
+    assert c.n_free_pages + c.n_cached_pages == c.num_pages - 1
+    assert (c.ref_counts[1:] == 0).all() and c.ref_counts[0] == 1
+
+
+def test_fork_request_continuations_match_parent(setup, rng):
+    """fork_request shares the parent's pages by refcount and each greedy
+    child reproduces the parent's own continuation from the fork point."""
+    prompt = rng.integers(0, 64, (9,)).astype(np.int32)
+    eng = _engine(setup, True)
+    rid = eng.submit(prompt, 10)
+    parent = eng._seqs[rid]
+    while len(parent.generated) < 3:
+        assert eng.step()
+    kids = eng.fork_request(rid, n=2, max_new_tokens=4)
+    assert eng.n_forks == 2
+    # full pages genuinely shared: refcount > 1 somewhere in the parent slot
+    shared = [p for p in eng.cache.seq_pages[parent.slot]
+              if eng.cache.ref_counts[p] >= 3]
+    assert shared, "fork must share full pages by refcount"
+    out = eng.run()
+    assert sorted(out) == sorted([rid, *kids])
+    for k in kids:
+        np.testing.assert_array_equal(out[k], out[rid][3:7])
+
+
+def test_fork_request_without_slot_falls_back_to_waiting(setup, rng):
+    """Forking a request that holds no slot resubmits its tokens; nothing
+    leaks and the child still completes (via the prefix cache if possible).
+    """
+    prompt = rng.integers(0, 64, (8,)).astype(np.int32)
+    eng = _engine(setup, True)
+    rid = eng.submit(prompt, 4)
+    kids = eng.fork_request(rid, n=1)    # parent still waiting: no slot
+    assert eng.n_forks == 0
+    out = eng.run()
+    np.testing.assert_array_equal(out[kids[0]], out[rid])
+    with pytest.raises(ValueError):
+        eng.fork_request(rid)            # finished parents cannot fork
+    with pytest.raises(KeyError):
+        eng.fork_request(10_000)
+
+
+def test_fork_request_over_capacity_rejected(setup, rng):
+    """A child whose fork-point prompt + fresh budget can never fit must be
+    rejected like submit() would — admitting it on pool headroom alone
+    self-preempts forever at the max_pages_per_seq reserve (livelock)."""
+    prompt = rng.integers(0, 64, (8,)).astype(np.int32)
+    eng = _engine(setup, True, max_seq=4 * PS, num_pages=64)
+    rid = eng.submit(prompt, 8)          # 16 tokens: exactly fits
+    parent = eng._seqs[rid]
+    while len(parent.generated) < 3:
+        assert eng.step()
+    with pytest.raises(ValueError, match="max_pages_per_seq"):
+        eng.fork_request(rid)            # 11 prompt + 8 budget = 19 > 16
+    out = eng.run()                      # parent itself is unharmed
+    assert len(out[rid]) == 8
+
+
+def test_submit_error_names_binding_limit(setup):
+    """The rejection message cites whichever limit actually rejected the
+    request — max_pages_per_seq when the pool itself would fit it."""
+    eng = _engine(setup, True, num_pages=64, max_seq=2 * PS)
+    with pytest.raises(ValueError, match="max_pages_per_seq"):
+        eng.submit(np.zeros(3 * PS, np.int32), 1)
+    eng2 = _engine(setup, True, num_pages=4, max_seq=None,
+                   max_pages_per_seq=64)
+    with pytest.raises(ValueError, match="page pool"):
+        eng2.submit(np.zeros(4 * PS, np.int32), 1)
+
+
+# ---------------------------------------------------------------------------
+# tensor parallelism: the registry is head-agnostic control plane
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("tp", [2])
+def test_prefix_cache_on_off_identical_under_tp(setup, rng, tp):
+    if len(jax.devices()) < tp:
+        pytest.skip(f"needs {tp} devices (XLA_FLAGS="
+                    f"--xla_force_host_platform_device_count={tp})")
+    reqs = _shared_prefix_requests(rng, 3)
+    base = _serve_sequential(_engine(setup, False), reqs)
+    mesh = make_tp_mesh(tp)
+    on = _engine(setup, True, mesh=mesh)
+    out_on = _serve_sequential(on, reqs)
+    out_off = _serve_sequential(_engine(setup, False, mesh=mesh), reqs)
+    assert on.n_prefix_hits == 2         # control plane unchanged under TP
+    for rid in base:
+        np.testing.assert_array_equal(out_on[rid], base[rid])
+        np.testing.assert_array_equal(out_off[rid], base[rid])

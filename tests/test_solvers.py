@@ -4,6 +4,8 @@ import itertools
 import numpy as np
 import jax.numpy as jnp
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import assume, given, settings, strategies as st
 
 from repro.core import reference, solve_flat, dp_boundaries, \
