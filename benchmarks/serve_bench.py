@@ -31,7 +31,15 @@ count=N``), asserting greedy-token identity to tp=1 and recording which
 param groups sharded (DESIGN.md Sec. 10). With one device the axis
 degenerates to tp=1 only.
 
-A fifth axis (``prefix_sharing``) serves a sequential stream of requests
+A fifth axis (``decode_horizon``) serves the same burst with H ∈ {1, 4, 8}
+fused decode iterations per dispatch (on-device sampling; DESIGN.md
+Sec. 12). It asserts greedy-token identity across horizons and that decode
+dispatches-per-token amortize by the horizon factor (< (1+ε)/H of the
+horizon=1 rate), and reports tokens/sec plus host-sync counts — at decode
+batch sizes the dispatch/sync overhead dominates, so fewer, fatter
+dispatches is the whole point.
+
+A sixth axis (``prefix_sharing``) serves a sequential stream of requests
 behind one shared full-page-aligned prefix with the automatic prefix cache
 on vs off, across execution modes and TP sizes. It asserts the acceptance
 invariant of DESIGN.md Sec. 11: every request after the first drops its
@@ -221,6 +229,94 @@ def _run_tp_axis(model, qparams, reqs):
     return axis
 
 
+def _run_horizon_axis(model, qparams, fast):
+    """Decode-horizon axis: H fused decode iterations + on-device sampling
+    per dispatch vs the classic one-token-per-dispatch loop (DESIGN.md
+    Sec. 12). Two workloads per horizon:
+
+      * ``cohort`` — 8 lockstep-budget requests in one burst. Batch ramp-up
+        interleaves one decode wave per prefill admission regardless of
+        horizon, so the per-token dispatch rate here floors above 1/H;
+        asserted strictly decreasing in H plus token identity.
+      * ``single_stream`` — one request decoding alone: pure decode regime,
+        where the acceptance bound holds exactly — decode dispatches per
+        token = ceil((B-1)/H)/B for budget B (the first token is sampled
+        from the prefill dispatch), asserted < (1+ε)/H.
+
+    Wall tokens/sec is reported (CPU smoke scale is dispatch-bound, which
+    is exactly what fused dispatches attack), but not asserted — wall
+    clocks flake in CI; the dispatch/sync counters are the guarantees.
+    """
+    import jax
+
+    from repro.serve import ContinuousEngine
+
+    rng = np.random.default_rng(3)
+    budget = 16 if fast else 32
+    cohort = [(rng.integers(0, 64, (6,)).astype(np.int32), budget)
+              for _ in range(8)]
+    single = [(rng.integers(0, 64, (6,)).astype(np.int32), budget)]
+    max_seq = 8 + budget
+
+    def build(h, reqs):
+        eng = ContinuousEngine(model, qparams, max_batch=8, page_size=4,
+                               num_pages=128, max_seq=max_seq,
+                               prefill_chunk=8, decode_horizon=h)
+        for r in reqs:
+            eng.submit(*r)
+        return eng
+
+    def measure(h, reqs):
+        build(h, reqs).run()                       # warm jit buckets
+        dt = float("inf")                          # best-of-3: the timed
+        for _ in range(3):                         # region is tiny, so take
+            eng = build(h, reqs)                   # the least-noisy run;
+            t0 = time.perf_counter()               # construction/submit sit
+            outs = eng.run()                       # outside the clock
+            dt = min(dt, time.perf_counter() - t0)
+        return outs, {
+            "seconds": round(dt, 3),
+            "tokens": eng.n_tokens_out,
+            "tokens_per_s": round(eng.n_tokens_out / dt, 1),
+            "decode_dispatches": eng.n_decode_steps,
+            "dispatches": eng.n_steps,
+            "host_syncs": eng.n_host_syncs,
+            "decode_dispatches_per_token": round(
+                eng.n_decode_steps / max(eng.n_tokens_out, 1), 4),
+        }
+
+    axis = {"budget": budget, "horizons": {}}
+    base = prev = base_outs = None
+    for h in (1, 4, 8):
+        c_out, c = measure(h, cohort)
+        s_out, s = measure(h, single)
+        entry = {"cohort": c, "single_stream": s}
+        # single stream: the clean amortization bound (ceil rounding only)
+        assert s["decode_dispatches_per_token"] < 1.25 / h, (h, s)
+        if base is None:
+            base = entry
+            base_outs = (c_out, s_out)
+        else:
+            bc, bs = base_outs
+            ident = (all(np.array_equal(bc[r], c_out[r]) for r in bc)
+                     and all(np.array_equal(bs[r], s_out[r]) for r in bs))
+            entry["tokens_identical_to_h1"] = bool(ident)
+            if jax.default_backend() != "tpu":
+                assert ident, f"decode_horizon={h} diverged from horizon=1"
+            for k in ("cohort", "single_stream"):
+                # strictly decreasing in H: each horizon vs the previous
+                assert (entry[k]["decode_dispatches"]
+                        < prev[k]["decode_dispatches"]), (h, k, entry)
+                entry[k]["dispatch_rate_vs_h1"] = round(
+                    entry[k]["decode_dispatches_per_token"]
+                    / base[k]["decode_dispatches_per_token"], 4)
+                entry[k]["tokens_per_s_vs_h1"] = round(
+                    entry[k]["tokens_per_s"] / base[k]["tokens_per_s"], 2)
+        axis["horizons"][f"h{h}"] = entry
+        prev = entry
+    return axis
+
+
 def _run_prefix_axis(model, qparams, n_req, page_size=4, shared_pages=4):
     """Prefix-sharing axis: a sequential stream (each request completes
     before the next arrives, so every later one can hit the registry)
@@ -377,6 +473,21 @@ def main():
     print(f"[serve_bench] tp axis ({tpx['devices']} devices): "
           + " | ".join(f"{k} {v['seconds']}s" for k, v in tpx["sizes"].items())
           + f" | identity {' '.join(ident)}")
+
+    report["decode_horizon"] = _run_horizon_axis(model, qparams, args.fast)
+    hx = report["decode_horizon"]["horizons"]
+    print("[serve_bench] decode_horizon axis (cohort): "
+          + " | ".join(f"{k} {v['cohort']['decode_dispatches']} disp "
+                       f"{v['cohort']['tokens_per_s']:.0f} tok/s"
+                       for k, v in hx.items())
+          + f" | identity {hx['h8'].get('tokens_identical_to_h1')}")
+    print("[serve_bench] decode_horizon axis (single): "
+          + " | ".join(
+              "{} dpt {}".format(
+                  k, v["single_stream"]["decode_dispatches_per_token"])
+              for k, v in hx.items())
+          + " | h8 wall vs h1 x{}".format(
+              hx["h8"]["single_stream"].get("tokens_per_s_vs_h1")))
 
     report["prefix_sharing"] = _run_prefix_axis(
         model, qparams, n_req=4 if args.fast else 8)

@@ -254,6 +254,63 @@ class Model:
         hidden = jnp.take_along_axis(x, last[:, None, None], axis=1)[:, 0]
         return self._logits(params, hidden, parallel), {"layers": layer_pools}
 
+    def paged_decode_horizon(self, params, pools, tokens, start_pos,
+                             block_tables, n_left, eos_ids, horizon,
+                             parallel=None):
+        """Run ``horizon`` decode iterations as one ``lax.scan`` with greedy
+        sampling *on device* (DESIGN.md Sec. 12).
+
+        Each iteration is one ``paged_step`` over a (B, 1) token batch: it
+        writes the fed token's K/V through the paged-write path, argmaxes
+        its own logits, and feeds the sampled token back through the carry.
+        Per-row stop masks retire rows mid-scan — once a row samples its
+        ``eos_ids[b]`` or exhausts ``n_left[b]``, its remaining iterations
+        carry ``q_pos = -1`` and are exact no-ops (the write lands in the
+        reserved scratch page, the attention mask blanks the query), so a
+        finished row costs nothing but already-paid padding math.
+
+        tokens: (B,) int32 — the last sampled, not-yet-cached token per
+        row; start_pos: (B,) int32 its absolute position (-1 = inactive pad
+        row); block_tables: (B, max_pages) int32, covering the caller's
+        whole decode lease so mid-horizon page-boundary crossings need no
+        host help; n_left: (B,) int32 per-row remaining token budget;
+        eos_ids: (B,) int32 (-1 = no eos); horizon: static int >= 1.
+
+        Returns ``(out_tokens (B, H) int32, valid (B, H) bool, new_pools)``
+        — only O(B*H) scalars cross back to host, never (B, vocab) logits.
+        ``valid`` is a per-row prefix mask: row b sampled exactly
+        ``valid[b].sum()`` real tokens, trailing entries are no-op garbage.
+        Greedy outputs are token-identical to ``horizon=1`` host-side
+        argmax (same f32 logits, same first-max tie-break). Under a
+        ``TPShard`` the whole scan runs inside one ``shard_map`` dispatch:
+        logits are replicated by the step's psum/all_gather before the
+        argmax, so every rank samples the same token and writes consistent
+        local K/V shards.
+        """
+        tokens = tokens.astype(jnp.int32)
+        active0 = (start_pos >= 0) & (n_left > 0)
+
+        def body(carry, i):
+            pools, tok, pos, active = carry
+            q_pos = jnp.where(active, pos, -1)[:, None]
+            kv_lens = jnp.maximum(pos, 0) + 1
+            logits, pools = self.paged_step(params, pools, tok[:, None],
+                                            q_pos, kv_lens, block_tables,
+                                            parallel)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            hit_eos = (eos_ids >= 0) & (nxt == eos_ids)
+            valid = active
+            active = active & ~hit_eos & (i + 1 < n_left)
+            tok = jnp.where(valid, nxt, tok)
+            pos = pos + valid.astype(jnp.int32)
+            return (pools, tok, pos, active), (jnp.where(valid, nxt, 0),
+                                               valid)
+
+        (pools, _, _, _), (toks, valid) = jax.lax.scan(
+            body, (pools, tokens, start_pos.astype(jnp.int32), active0),
+            jnp.arange(horizon, dtype=jnp.int32))
+        return toks.T, valid.T, pools
+
     # -- cache specs ---------------------------------------------------------
     def cache_defs(self, batch, seq_len):
         """(shape, dtype, logical_axes) per cache leaf, nested like the cache."""

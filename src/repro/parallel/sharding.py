@@ -36,6 +36,13 @@ class TPShard:
     heads or vocab shards. Model functions distinguish the two by type:
     a ``TPShard`` ``parallel=`` argument means "you are running on the
     local shard of a mesh axis named ``axis`` of size ``size``".
+
+    Multi-iteration bodies compose: the decode-horizon scan
+    (``Model.paged_decode_horizon``, DESIGN.md Sec. 12) runs *inside* the
+    ``shard_map`` region, so H fused decode iterations — per-iteration
+    psums, logit all_gathers and on-device argmax included — are still one
+    dispatch per mesh, with sampling replicated across ranks because every
+    collective completes before the argmax reads the logits.
     """
     axis: str = "model"
     size: int = 1

@@ -13,9 +13,23 @@ traces of one function (``Model.paged_step``):
 
 All shapes are static; inactive rows / chunk tails carry q_pos == -1 and
 scatter into the reserved scratch page, so no retracing ever happens once
-the buckets are warm. Greedy sampling happens on host from the returned
-last-token logits, which is what makes output token-identical to the static
-``ServeEngine`` (same model math, same argmax).
+the buckets are warm. With the default ``decode_horizon=1`` greedy sampling
+happens on host from the returned last-token logits, which is what makes
+output token-identical to the static ``ServeEngine`` (same model math, same
+argmax).
+
+``decode_horizon=H`` (DESIGN.md Sec. 12) inverts that host/device contract
+on the decode hot path: one jitted dispatch runs H decode iterations as a
+``lax.scan`` with greedy sampling *on device*, each iteration feeding its
+argmax back through the carry and writing K/V through the paged path.
+Per-row stop masks retire rows that hit eos or exhaust their budget
+mid-horizon (their remaining iterations are exact no-ops via the scratch-
+page convention), the scheduler reserves the whole horizon lease up front
+so page boundaries are crossed without host help, and only (B, H) sampled
+tokens + done masks cross back — never (B, vocab) logits. Greedy outputs
+are token-identical to ``decode_horizon=1`` for every execution mode and
+mesh size (tested); preemption, prefix registration and ``fork_request``
+semantics are unchanged.
 
 Automatic prefix caching (on by default; DESIGN.md Sec. 11): committed
 full KV pages register under a rolling content hash of their token chain,
@@ -58,6 +72,18 @@ def _paged_step(model, pools, params, tokens, q_pos, kv_lens, block_tables):
                             block_tables)
 
 
+# decode-horizon dispatch: pools is positional arg 2 here (model and the
+# static horizon precede it), hence the shifted donation index
+_DONATE_H = (2,) if jax.default_backend() in ("tpu", "gpu") else ()
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1), donate_argnums=_DONATE_H)
+def _paged_horizon_step(model, horizon, pools, params, tokens, start_pos,
+                        n_left, eos_ids, block_tables):
+    return model.paged_decode_horizon(params, pools, tokens, start_pos,
+                                      block_tables, n_left, eos_ids, horizon)
+
+
 @dataclasses.dataclass
 class ContinuousEngine:
     model: object
@@ -72,6 +98,7 @@ class ContinuousEngine:
     execution: Optional[str] = None   # "packed" | "simulated" | None=auto
     mesh: object = None               # tensor-parallel device mesh
     prefix_cache: bool = True         # automatic cross-request prefix reuse
+    decode_horizon: int = 1           # fused decode steps per dispatch
 
     def __post_init__(self):
         from .engine import resolve_execution
@@ -85,6 +112,10 @@ class ContinuousEngine:
                 "attention stack (ssm/xlstm/enc-dec caches are not paged)")
         self.execution, self.params = resolve_execution(self.execution,
                                                         self.params)
+        self.decode_horizon = int(self.decode_horizon)
+        if self.decode_horizon < 1:
+            raise ValueError(f"decode_horizon must be >= 1, "
+                             f"got {self.decode_horizon}")
         mpps = self.max_pages_per_seq
         if mpps is None and self.max_seq is not None:
             mpps = -(-self.max_seq // self.page_size)
@@ -93,19 +124,29 @@ class ContinuousEngine:
             max_seqs=self.max_batch, max_pages_per_seq=mpps,
             prefix_cache=self.prefix_cache)
         self.scheduler = Scheduler(self.cache, self.max_batch,
-                                   self.prefill_chunk)
+                                   self.prefill_chunk,
+                                   decode_horizon=self.decode_horizon)
         if self.mesh is not None:
             self._init_tensor_parallel()
         elif self.parallel is None:
             self._step_fn = functools.partial(_paged_step, self.model)
+            self._horizon_fn = functools.partial(
+                _paged_horizon_step, self.model, self.decode_horizon)
         else:                              # parallel objects aren't hashable
             self._step_fn = jax.jit(
                 lambda pools, p, toks, qpos, kvl, bt: self.model.paged_step(
                     p, pools, toks, qpos, kvl, bt, self.parallel))
+            self._horizon_fn = jax.jit(
+                lambda pools, p, toks, sp, nl, eos, bt:
+                self.model.paged_decode_horizon(
+                    p, pools, toks, sp, bt, nl, eos, self.decode_horizon,
+                    self.parallel))
         self._next_id = 0
         self._seqs: Dict[int, Sequence] = {}
         self._finished: Dict[int, np.ndarray] = {}
         self.n_steps = 0
+        self.n_decode_steps = 0       # decode dispatches (any horizon)
+        self.n_host_syncs = 0         # blocking device->host transfers
         self.n_tokens_out = 0
         self.n_work_positions = 0     # device token-positions incl. padding
         self.n_forks = 0              # fork_request children that shared pages
@@ -153,6 +194,21 @@ class ContinuousEngine:
         donate = (0,) if jax.default_backend() in ("tpu", "gpu") else ()
         self._step_fn = jax.jit(fn, donate_argnums=donate)
 
+        # the decode-horizon scan lives *inside* the shard_map body, so H
+        # fused iterations (collectives included) are still one dispatch
+        horizon = self.decode_horizon
+
+        def local_horizon(pools, params, tokens, start_pos, n_left, eos, bt):
+            return model.paged_decode_horizon(
+                tp_localize(params), pools, tokens, start_pos, bt, n_left,
+                eos, horizon, parallel=tp)
+
+        hfn = shard_map_compat(
+            local_horizon, self.mesh,
+            in_specs=(pool_spec, pspecs, rep, rep, rep, rep, rep),
+            out_specs=(rep, rep, pool_spec))
+        self._horizon_fn = jax.jit(hfn, donate_argnums=donate)
+
     # -- API ----------------------------------------------------------------
     def submit(self, prompt, max_new_tokens, eos_id=None) -> int:
         """Enqueue one request; returns its id (the ``collect()`` key).
@@ -173,11 +229,13 @@ class ContinuousEngine:
 
     def step(self) -> bool:
         """Run one scheduler-chosen unit of work (one prefill chunk or one
-        packed decode batch = one jitted device dispatch); returns False
+        packed decode batch = one jitted device dispatch, covering up to
+        ``decode_horizon`` fused decode iterations per row); returns False
         when no submitted work remains. Safe to interleave with ``submit``
         — new requests join from the next step. Greedy sampling happens on
-        host from the returned logits, so outputs are reproducible across
-        ``execution`` modes and TP meshes (same math, same argmax)."""
+        host at ``decode_horizon=1`` and on device inside the fused scan
+        otherwise; both are the same f32 argmax, so outputs are
+        reproducible across ``execution`` modes, TP meshes and horizons."""
         work = self.scheduler.schedule()
         if work is None:
             return False
@@ -289,17 +347,30 @@ class ContinuousEngine:
             seq.state = DECODE
             self._maybe_finish(seq)
 
-    def _run_decode(self, seqs):
-        b = 1                           # bucket: next power of two
+    def _decode_bucket(self, seqs):
+        """Shared decode-batch shape policy: pad to the next power of two
+        and gather each row's slot + last sampled (not-yet-cached) token.
+        Both decode paths build on this so the bucket rounding and the
+        last-token convention have one source of truth."""
+        b = 1
         while b < len(seqs):
             b *= 2
         slots = [-1] * b
-        tokens = np.zeros((b, 1), np.int32)
+        last = np.zeros((b,), np.int32)
+        for i, seq in enumerate(seqs):
+            slots[i] = seq.slot
+            last[i] = seq.generated[-1]
+        return b, slots, last
+
+    def _run_decode(self, seqs):
+        self.n_decode_steps += 1
+        if self.decode_horizon > 1:
+            return self._run_decode_horizon(seqs)
+        b, slots, last = self._decode_bucket(seqs)
+        tokens = last[:, None]
         q_pos = np.full((b, 1), -1, np.int32)
         kv_lens = np.zeros((b,), np.int32)
         for i, seq in enumerate(seqs):
-            slots[i] = seq.slot
-            tokens[i, 0] = seq.generated[-1]
             q_pos[i, 0] = seq.n_total - 1
             kv_lens[i] = seq.n_total
         logits = self._dispatch(slots, tokens, q_pos, kv_lens)
@@ -314,6 +385,47 @@ class ContinuousEngine:
             self._sample_and_advance(seq, logits[i])
             self._maybe_finish(seq)
 
+    def _run_decode_horizon(self, seqs):
+        """One fused dispatch = up to ``decode_horizon`` decode iterations
+        with on-device greedy sampling (DESIGN.md Sec. 12). Only (B, H)
+        tokens + done masks come back; the host applies them in bulk —
+        commit to the row's final extent, registration catches every page
+        boundary crossed inside the horizon (``register_prefix`` is
+        incremental over newly filled pages), and finish/eos semantics are
+        unchanged because ``valid`` row masks are exact prefix masks."""
+        h = self.decode_horizon
+        b, slots, tokens = self._decode_bucket(seqs)
+        start_pos = np.full((b,), -1, np.int32)
+        n_left = np.zeros((b,), np.int32)
+        eos = np.full((b,), -1, np.int32)
+        for i, seq in enumerate(seqs):
+            start_pos[i] = seq.n_total - 1
+            n_left[i] = seq.req.max_new_tokens - len(seq.generated)
+            if seq.req.eos_id is not None:
+                eos[i] = seq.req.eos_id
+        self.n_work_positions += b * h
+        bt = self.cache.table_rows(slots)
+        out_tok, valid, self.cache.pools = self._horizon_fn(
+            self.cache.pools, self.params, jnp.asarray(tokens),
+            jnp.asarray(start_pos), jnp.asarray(n_left), jnp.asarray(eos),
+            bt)
+        out_tok, valid = np.asarray(out_tok), np.asarray(valid)
+        self.n_host_syncs += 1
+        for i, seq in enumerate(seqs):
+            k = int(valid[i].sum())     # valid is a prefix mask per row
+            for t in out_tok[i, :k]:
+                seq.generated.append(int(t))
+            self.n_tokens_out += k
+            # the dispatch wrote K/V for each *input* token: positions
+            # n_total-1 .. n_total-2+k of the pre-dispatch sequence — the
+            # final sampled token is, as ever, not yet in the cache
+            seq.cache_len = seq.n_total - 1
+            self.cache.commit(seq.slot, seq.cache_len)
+            if self.prefix_cache:
+                self.cache.register_prefix(seq.slot,
+                                           seq.tokens[:seq.cache_len])
+            self._maybe_finish(seq)
+
     # -- helpers --------------------------------------------------------------
     def _dispatch(self, slots, tokens, q_pos, kv_lens):
         self.n_work_positions += tokens.size
@@ -321,6 +433,7 @@ class ContinuousEngine:
         logits, self.cache.pools = self._step_fn(
             self.cache.pools, self.params, jnp.asarray(tokens),
             jnp.asarray(q_pos), jnp.asarray(kv_lens), bt)
+        self.n_host_syncs += 1          # blocking (B, vocab) logits fetch
         return np.asarray(logits)
 
     def _sample_and_advance(self, seq, logits):

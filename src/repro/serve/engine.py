@@ -88,6 +88,10 @@ class ServeEngine:
                                                             self.parallel))
         self._score = jax.jit(
             lambda p, b: self.model.loss(p, b, self.parallel))
+        # n_tokens and the sampling branch are static; temperature itself is
+        # traced, so sweeping it never retraces the scan
+        self._scan_generate = jax.jit(self._scan_generate_impl,
+                                      static_argnums=(6, 7))
 
     def _init_tensor_parallel(self):
         """Build shard_map'd prefill/decode over ``mesh`` (DESIGN.md §10).
@@ -164,7 +168,50 @@ class ServeEngine:
         return new
 
     def generate(self, prompts, n_tokens, temperature=0.0, rng=None):
-        """prompts: (B, P) int32. Returns (B, n_tokens) greedy/temp samples."""
+        """prompts: (B, P) int32. Returns (B, n_tokens) greedy/temp samples.
+
+        The decode loop is one jitted ``lax.scan`` with sampling *on
+        device* — greedy argmax or temperature ``jax.random.categorical``,
+        both inside the scan body — so serving ``n_tokens`` costs one
+        prefill dispatch plus one scan dispatch instead of ``n_tokens``
+        per-step host round trips. Tokens (and temperature samples, for a
+        given ``rng``) are identical to the per-step loop this replaced
+        (``_generate_stepwise``, kept for the identity test): same sample →
+        decode → advance ops in the same order, only the dispatch boundary
+        moved."""
+        prompts = jnp.asarray(prompts, jnp.int32)
+        b, p = prompts.shape
+        assert p + n_tokens <= self.max_seq
+        logits, cache = self._prefill(self.params, {"tokens": prompts})
+        cache = self._grow_cache(cache, p)
+        rng = rng if rng is not None else jax.random.PRNGKey(0)
+        temp = jnp.asarray(float(temperature) if temperature > 0 else 1.0,
+                           jnp.float32)
+        return self._scan_generate(self.params, logits, cache,
+                                   jnp.full((b,), p, jnp.int32), rng, temp,
+                                   int(n_tokens), bool(temperature > 0))
+
+    def _scan_generate_impl(self, params, logits, cache, cur, rng, temp,
+                            n_tokens, use_temp):
+        def body(carry, _):
+            logits, cache, cur, rng = carry
+            if use_temp:
+                rng, sub = jax.random.split(rng)
+                tok = jax.random.categorical(sub, logits / temp, axis=-1)
+            else:
+                tok = jnp.argmax(logits, axis=-1)
+            logits, cache = self._decode(params, cache,
+                                         tok[:, None].astype(jnp.int32), cur)
+            return (logits, cache, cur + 1, rng), tok
+        _, toks = jax.lax.scan(body, (logits, cache, cur, rng), None,
+                               length=n_tokens)
+        return toks.T                             # (n, B) -> (B, n)
+
+    def _generate_stepwise(self, prompts, n_tokens, temperature=0.0,
+                           rng=None):
+        """The pre-scan per-step Python loop (one dispatch + one host sync
+        per token). Retained as the identity oracle for ``generate`` — not
+        a serving path."""
         prompts = jnp.asarray(prompts, jnp.int32)
         b, p = prompts.shape
         assert p + n_tokens <= self.max_seq

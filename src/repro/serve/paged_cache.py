@@ -227,11 +227,26 @@ class PagedKVCache:
             self.registry_epoch += 1
         return freed
 
+    def n_covered_tokens(self, slot) -> int:
+        """Token positions ``slot``'s reserved pages can hold — the extent
+        of its current lease. A decode-horizon dispatch (DESIGN.md Sec. 12)
+        may write any position below this without host intervention;
+        ``commit`` may trail it when a row stopped early (eos mid-horizon),
+        and ``release`` returns trailing never-written pages all the same."""
+        return len(self.seq_pages[slot]) * self.page_size
+
     def reserve(self, slot, n_tokens):
         """Grow ``slot``'s block table to cover ``n_tokens``. All-or-nothing:
         raises OutOfPages without partial allocation if the pool is short
         (after reclaiming LRU-cached prefix pages, which are always spent
-        before the caller resorts to preempting a live sequence)."""
+        before the caller resorts to preempting a live sequence).
+
+        A reservation is a *lease*: the pages are addressable device-side
+        (``table_rows`` uploads the whole row) the moment this returns, so
+        a fused multi-token dispatch can fill them without further host
+        round trips. Reserved-but-unwritten pages hold stale data until
+        written; the attention mask (``kpos < kv_lens``) keeps them
+        invisible, and ``commit`` only ever ratifies what was written."""
         need = self.pages_for(n_tokens) - len(self.seq_pages[slot])
         if need <= 0:
             return
@@ -377,10 +392,13 @@ class PagedKVCache:
     def table_rows(self, slots):
         """Device block-table rows for the given slots, zero-padded to the
         packed batch size implied by ``len(slots)`` (-1 slots = pad rows).
-        Memoized on (slots, per-slot table versions): the steady-state
-        decode loop re-dispatches the same rows every step, so the
-        (B, max_pages_per_seq) host build + transfer happens only when a
-        slot's table actually changed."""
+        Each row carries the slot's *entire* reservation — every leased
+        page, committed or not — which is what lets a decode-horizon
+        dispatch cross page boundaries mid-scan with no host intervention
+        (DESIGN.md Sec. 12). Memoized on (slots, per-slot table versions):
+        the steady-state decode loop re-dispatches the same rows every
+        step, so the (B, max_pages_per_seq) host build + transfer happens
+        only when a slot's table actually changed."""
         key = tuple(int(s) for s in slots)
         vers = tuple(int(self._versions[s]) if s >= 0 else -1 for s in key)
         hit = self._rows_cache.get(key)

@@ -13,6 +13,13 @@ Policy choices (deliberately simple and deterministic; see DESIGN.md §8):
   * Prefill/decode interleaving alternates when both kinds of work exist,
     so a stream of long prompts cannot starve running decodes (and vice
     versa).
+  * Horizon-aware decode leases: with ``decode_horizon=H`` the decode
+    reservation covers ``n_total - 1 + min(H, remaining budget)`` positions
+    up front, so one fused device dispatch can sample up to H tokens —
+    crossing page boundaries mid-horizon — without coming back to the host
+    (DESIGN.md Sec. 12). A lease is just a reservation: pages left
+    unwritten when a row stops early stay reserved until the sequence
+    finishes or is preempted, and release() returns them either way.
   * Preemption by recompute: when decode needs a page and the pool is dry,
     the youngest running sequence is evicted — its pages are freed and it
     re-enters the waiting queue (front) with its generated-so-far tokens
@@ -58,14 +65,27 @@ class Sequence:
         self.state = PREFILL
         self.n_preempted = 0
         self._prefix_match = None   # (registry_epoch, match) memo
+        self._tokens_memo = None    # (len(generated), array) memo
 
     @property
     def tokens(self) -> np.ndarray:
         """Prompt + everything sampled so far (the re-prefill source after a
-        preemption; the last sampled token is not yet in the cache)."""
-        return np.concatenate(
+        preemption; the last sampled token is not yet in the cache).
+
+        Memoized on ``len(generated)`` — ``generated`` is append-only, so
+        length identifies content — because every ``schedule()`` call,
+        prefill chunk, and prefix registration reads this, and rebuilding
+        the concatenation is O(sequence length) per access. The memo is
+        returned read-only since callers share it (fork already copies)."""
+        memo = self._tokens_memo
+        if memo is not None and memo[0] == len(self.generated):
+            return memo[1]
+        toks = np.concatenate(
             [self.req.prompt,
              np.asarray(self.generated, np.int32)]).astype(np.int32)
+        toks.setflags(write=False)
+        self._tokens_memo = (len(self.generated), toks)
+        return toks
 
     @property
     def n_total(self):
@@ -80,10 +100,11 @@ class Sequence:
 
 class Scheduler:
     def __init__(self, cache: PagedKVCache, max_batch: int,
-                 prefill_chunk: int):
+                 prefill_chunk: int, decode_horizon: int = 1):
         self.cache = cache
         self.max_batch = max_batch
         self.prefill_chunk = prefill_chunk
+        self.decode_horizon = int(decode_horizon)
         self.waiting: Deque[Sequence] = deque()
         self.running: List[Sequence] = []
         self._last_was_prefill = False
@@ -183,11 +204,24 @@ class Scheduler:
                 if victim is seq:
                     return False
 
+    def _decode_lease(self, seq) -> int:
+        """Token positions the next decode dispatch may write for ``seq``:
+        a horizon dispatch samples up to ``min(decode_horizon, remaining
+        budget)`` tokens, writing K/V for each input token starting at
+        ``n_total - 1``, so the lease covers ``n_total - 1 + h`` positions.
+        Reserving the whole lease up front is what lets the device cross
+        page boundaries mid-horizon with no host intervention (the block
+        table already addresses every reserved page). ``decode_horizon=1``
+        degenerates to the classic one-position reserve (``n_total``)."""
+        h = min(self.decode_horizon,
+                seq.req.max_new_tokens - len(seq.generated))
+        return seq.n_total - 1 + max(h, 1)
+
     def _try_decode(self):
         decodes = [s for s in self.running if s.state == DECODE]
         for seq in list(decodes):
             if seq in self.running:        # a peer's reserve may evict it
-                self._reserve_or_preempt(seq, seq.n_total)
+                self._reserve_or_preempt(seq, self._decode_lease(seq))
         decodes = [s for s in decodes if s in self.running]
         if not decodes:
             return None

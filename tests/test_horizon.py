@@ -1,0 +1,345 @@
+"""Decode-horizon execution (DESIGN.md Sec. 12): H fused decode steps +
+on-device sampling per dispatch, token-identical to ``decode_horizon=1``.
+
+Covers the contract's edges: eos fired mid-horizon (trailing iterations are
+no-ops, output trimmed), a page boundary crossed inside one horizon,
+preemption while a horizon lease is outstanding, prefix-cache registration
+parity across horizons, tp=2 identity at horizon > 1 — plus the static
+``ServeEngine.generate`` scan (greedy and temperature) against the per-step
+loop it replaced, and the ``Sequence.tokens`` memo.
+"""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import smoke_config
+from repro.core import QuantPolicy, quantize_params
+from repro.launch.mesh import make_tp_mesh
+from repro.models import Model
+from repro.serve import ContinuousEngine, ServeEngine
+from repro.serve.scheduler import Request, Sequence
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = smoke_config("internlm2-1.8b")
+    cfg = dataclasses.replace(cfg, vocab_size=64, vocab_round=64)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    params = jax.tree_util.tree_map(lambda p: p.astype(jnp.float32), params)
+    return model, params
+
+
+@pytest.fixture(scope="module")
+def qsetup(setup):
+    model, params = setup
+    qparams, report = quantize_params(params, QuantPolicy(
+        bits=4, block=64, solver="kmeans", min_size=1024))
+    assert report
+    return model, qparams
+
+
+def _mixed_requests(rng, n, max_new=18):
+    return [(rng.integers(0, 64, (int(rng.integers(3, 14)),))
+             .astype(np.int32), int(rng.integers(2, max_new)))
+            for _ in range(n)]
+
+
+def _serve(model, params, requests, horizon, **over):
+    kw = dict(max_batch=8, page_size=4, num_pages=96, max_seq=48,
+              prefill_chunk=8, decode_horizon=horizon)
+    kw.update(over)
+    eng = ContinuousEngine(model, params, **kw)
+    for r in requests:
+        eng.submit(*r)
+    return eng, eng.run()
+
+
+# ---------------------------------------------------------------------------
+# acceptance: token identity across horizons x execution modes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("execution", ["simulated", "packed"])
+@pytest.mark.parametrize("horizon", [4, 8])
+def test_horizon_token_identity(qsetup, rng, execution, horizon):
+    """Greedy outputs are token-identical between decode_horizon=1 and
+    decode_horizon in {4, 8} for both execution modes, while the decode
+    dispatch count drops by roughly the horizon factor."""
+    model, qparams = qsetup
+    requests = _mixed_requests(rng, 9)
+    e1, base = _serve(model, qparams, requests, 1, execution=execution)
+    eh, out = _serve(model, qparams, requests, horizon, execution=execution)
+    assert sorted(out) == sorted(base)
+    for rid in base:
+        np.testing.assert_array_equal(out[rid], base[rid])
+    assert eh.n_tokens_out == e1.n_tokens_out
+    # ragged budgets + admission interleave leave straggler waves, so the
+    # reduction here is loose; the exact 1/H amortization is pinned by
+    # test_dispatch_count_amortized_by_horizon on a lockstep workload
+    assert eh.n_decode_steps < e1.n_decode_steps
+    assert eh.n_host_syncs < e1.n_host_syncs
+
+
+def test_dispatch_count_amortized_by_horizon(setup, rng):
+    """Lockstep workload: a 16-token generation at horizon 8 is exactly two
+    decode dispatches — dispatches-per-token hits the ideal 1/H."""
+    model, params = setup
+    prompt = rng.integers(0, 64, (4,)).astype(np.int32)
+    eng = ContinuousEngine(model, params, max_batch=2, page_size=4,
+                           num_pages=32, prefill_chunk=8, decode_horizon=8)
+    rid = eng.submit(prompt, 16)
+    out = eng.run()
+    assert len(out[rid]) == 16
+    assert eng.n_decode_steps == 2            # 16 tokens / horizon 8
+    assert eng.n_host_syncs == 3              # 1 prefill + 2 decode waves
+
+
+# ---------------------------------------------------------------------------
+# eos mid-horizon: trailing iterations no-op, output trimmed
+# ---------------------------------------------------------------------------
+
+def test_eos_mid_horizon_trims_output(setup, rng):
+    model, params = setup
+    prompt = rng.integers(0, 64, (6,)).astype(np.int32)
+    eng0 = ContinuousEngine(model, params, max_batch=2, page_size=4,
+                            num_pages=32, prefill_chunk=8)
+    rid = eng0.submit(prompt, 12)
+    full = eng0.run()[rid]
+    eos = int(full[2])                      # fires on iteration 3 of 12
+    eng = ContinuousEngine(model, params, max_batch=2, page_size=4,
+                           num_pages=32, prefill_chunk=8, decode_horizon=8)
+    rid = eng.submit(prompt, 12, eos_id=eos)
+    out = eng.run()[rid]
+    assert len(out) == 3 and out[-1] == eos
+    np.testing.assert_array_equal(out, full[:3])
+    # the whole generation fit one fused dispatch; the 5 post-eos
+    # iterations were on-device no-ops, not extra dispatches
+    assert eng.n_decode_steps == 1
+    assert eng.n_tokens_out == 3
+
+
+def test_budget_exhausted_mid_horizon(setup, rng):
+    """max_new_tokens smaller than the horizon: the stop mask retires the
+    row at the budget, never past it."""
+    model, params = setup
+    prompt = rng.integers(0, 64, (5,)).astype(np.int32)
+    eng = ContinuousEngine(model, params, max_batch=2, page_size=4,
+                           num_pages=32, prefill_chunk=8, decode_horizon=8)
+    rid = eng.submit(prompt, 3)
+    out = eng.run()[rid]
+    assert len(out) == 3
+    assert eng.n_decode_steps == 1
+
+
+# ---------------------------------------------------------------------------
+# page boundary crossed inside a horizon
+# ---------------------------------------------------------------------------
+
+def test_page_boundary_inside_horizon(setup, rng):
+    """page_size=2 with horizon=8 crosses several page boundaries inside
+    every fused dispatch; the up-front lease (reserve + full block-table
+    row) means no host intervention and identical tokens."""
+    model, params = setup
+    requests = _mixed_requests(rng, 3, max_new=14)
+    _, base = _serve(model, params, requests, 1, page_size=2, num_pages=96)
+    eng, out = _serve(model, params, requests, 8, page_size=2, num_pages=96)
+    for rid in base:
+        np.testing.assert_array_equal(out[rid], base[rid])
+
+
+def test_lease_covers_horizon_before_dispatch(setup, rng):
+    """The decode lease reserves n_total - 1 + min(H, budget) positions up
+    front: after every step, each decoding row's reserved pages cover its
+    whole next horizon."""
+    model, params = setup
+    eng = ContinuousEngine(model, params, max_batch=2, page_size=2,
+                           num_pages=64, prefill_chunk=8, decode_horizon=4)
+    rid = eng.submit(rng.integers(0, 64, (5,)).astype(np.int32), 9)
+    seq = eng._seqs[rid]
+    saw_decode = False
+    while True:
+        pre_total, pre_gen = seq.n_total, len(seq.generated)
+        if not eng.step():
+            break
+        if (len(seq.generated) > pre_gen and pre_gen > 0
+                and seq.slot >= 0):                        # a decode wave
+            saw_decode = True
+            h = min(4, seq.req.max_new_tokens - pre_gen)
+            # the lease taken before the dispatch covered the whole wave
+            assert (eng.cache.n_covered_tokens(seq.slot)
+                    >= pre_total - 1 + h)
+    assert saw_decode
+    assert len(eng.collect()[rid]) == 9
+
+
+# ---------------------------------------------------------------------------
+# preemption while a horizon lease is outstanding
+# ---------------------------------------------------------------------------
+
+def test_preemption_with_outstanding_lease(setup, rng):
+    """A pool too small for two concurrent horizon leases forces eviction
+    mid-stream; recompute preserves greedy identity and the allocator
+    drains clean (leased-but-never-written pages are returned too)."""
+    model, params = setup
+    requests = [(rng.integers(0, 64, (4,)).astype(np.int32), 8)
+                for _ in range(2)]
+    _, ref = _serve(model, params, requests, 1, max_batch=4, page_size=2,
+                    num_pages=64, prefill_chunk=4, max_seq=None)
+    eng, out = _serve(model, params, requests, 4, max_batch=4, page_size=2,
+                      num_pages=9, prefill_chunk=4, max_seq=None)
+    assert eng.scheduler.n_preemptions > 0, "pool sized to force preemption"
+    for rid in ref:
+        np.testing.assert_array_equal(out[rid], ref[rid])
+    c = eng.cache
+    assert c.n_free_pages + c.n_cached_pages == c.num_pages - 1
+    assert (c.ref_counts[1:] == 0).all() and c.ref_counts[0] == 1
+
+
+# ---------------------------------------------------------------------------
+# prefix-cache registration parity across horizons
+# ---------------------------------------------------------------------------
+
+def test_prefix_registration_parity_h1_vs_h8(setup):
+    """A sequential stream behind one shared full-page prefix registers and
+    matches identically at horizon 1 and 8: same hits, same positions
+    saved, same tokens — boundary commits inside a horizon register every
+    page the one-step path would have."""
+    model, params = setup
+    rng = np.random.default_rng(11)
+    shared = rng.integers(0, 64, (16,)).astype(np.int32)     # 4 full pages
+    requests = [(np.concatenate([shared, rng.integers(0, 64, (
+        int(rng.integers(1, 5)),)).astype(np.int32)]),
+        int(rng.integers(6, 12))) for _ in range(4)]
+
+    def stream(horizon):
+        eng = ContinuousEngine(model, params, max_batch=4, page_size=4,
+                               num_pages=96, max_seq=48, prefill_chunk=4,
+                               decode_horizon=horizon)
+        outs = {}
+        for r in requests:                  # sequential: each can hit
+            eng.submit(*r)
+            outs.update(eng.run())
+        return eng, outs
+
+    e1, o1 = stream(1)
+    e8, o8 = stream(8)
+    assert e1.n_prefix_hits == e8.n_prefix_hits == len(requests) - 1
+    assert e1.n_prefix_positions_saved == e8.n_prefix_positions_saved
+    for rid in o1:
+        np.testing.assert_array_equal(o8[rid], o1[rid])
+    # decode-filled pages registered mid-horizon too, not only prefill's:
+    # both engines end with the same registry size
+    assert len(e8.cache._registry) == len(e1.cache._registry)
+
+
+# ---------------------------------------------------------------------------
+# tensor parallel: tp=2 identity at horizon > 1
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("horizon", [4])
+def test_tp2_horizon_token_identity(qsetup, rng, horizon):
+    """The scanned step stays a single shard_map dispatch at tp=2 and the
+    on-device argmax (over psum/all_gather-replicated logits) reproduces
+    the tp=1 horizon=1 tokens exactly."""
+    if len(jax.devices()) < 2:
+        pytest.skip("needs 2 devices (XLA_FLAGS="
+                    "--xla_force_host_platform_device_count=2)")
+    model, qparams = qsetup
+    requests = _mixed_requests(rng, 4, max_new=10)
+    _, base = _serve(model, qparams, requests, 1, execution="simulated",
+                     max_batch=4, max_seq=32, num_pages=64)
+    _, out = _serve(model, qparams, requests, horizon,
+                    execution="simulated", mesh=make_tp_mesh(2),
+                    max_batch=4, max_seq=32, num_pages=64)
+    for rid in base:
+        np.testing.assert_array_equal(out[rid], base[rid])
+
+
+# ---------------------------------------------------------------------------
+# fork_request with a horizon engine
+# ---------------------------------------------------------------------------
+
+def test_fork_request_under_horizon(setup, rng):
+    """fork_request semantics are untouched by the horizon path: children
+    forked mid-stream reproduce the parent's greedy continuation."""
+    model, params = setup
+    prompt = rng.integers(0, 64, (6,)).astype(np.int32)
+    ref_eng = ContinuousEngine(model, params, max_batch=4, page_size=4,
+                               num_pages=64, prefill_chunk=8)
+    rid = ref_eng.submit(prompt, 10)
+    ref = ref_eng.run()[rid]
+    eng = ContinuousEngine(model, params, max_batch=4, page_size=4,
+                           num_pages=64, prefill_chunk=8, decode_horizon=4)
+    rid = eng.submit(prompt, 10)
+    for _ in range(3):                      # prefill + first horizon wave
+        eng.step()
+    seq = eng._seqs[rid]
+    g_fork = len(seq.generated)
+    assert 0 < g_fork < 10
+    (child,) = eng.fork_request(rid, n=1)
+    done = eng.run()
+    np.testing.assert_array_equal(done[rid], ref)
+    # the child continues from the fork point with a fresh 10-token budget:
+    # under greedy sampling its output is continuation tokens
+    # [g_fork : g_fork + 10] (asserted against a longer-budget reference)
+    assert len(done[child]) == 10
+    long_eng = ContinuousEngine(model, params, max_batch=4, page_size=4,
+                                num_pages=64, max_seq=64, prefill_chunk=8)
+    long_rid = long_eng.submit(prompt, g_fork + 10)
+    np.testing.assert_array_equal(
+        done[child], long_eng.run()[long_rid][g_fork:])
+
+
+# ---------------------------------------------------------------------------
+# ServeEngine: scanned generate vs the per-step loop
+# ---------------------------------------------------------------------------
+
+def test_serve_engine_scan_greedy_identity(setup, rng):
+    model, params = setup
+    eng = ServeEngine(model, params, max_seq=64)
+    prompts = jnp.asarray(rng.integers(0, 64, (3, 8)), jnp.int32)
+    out = eng.generate(prompts, n_tokens=7)
+    assert out.shape == (3, 7)
+    np.testing.assert_array_equal(
+        np.asarray(out),
+        np.asarray(eng._generate_stepwise(prompts, n_tokens=7)))
+
+
+def test_serve_engine_scan_temperature_identity(setup, rng):
+    """Same rng key => the scanned categorical draws the exact same
+    samples as the per-step loop (identical split order)."""
+    model, params = setup
+    eng = ServeEngine(model, params, max_seq=64)
+    prompts = jnp.asarray(rng.integers(0, 64, (2, 6)), jnp.int32)
+    key = jax.random.PRNGKey(7)
+    np.testing.assert_array_equal(
+        np.asarray(eng.generate(prompts, 8, temperature=0.7, rng=key)),
+        np.asarray(eng._generate_stepwise(prompts, 8, temperature=0.7,
+                                          rng=key)))
+    # different temperatures reuse the same trace (temperature is traced,
+    # not static) and different keys give different samples
+    a = np.asarray(eng.generate(prompts, 8, temperature=1.3, rng=key))
+    b = np.asarray(eng.generate(prompts, 8, temperature=1.3,
+                                rng=jax.random.PRNGKey(8)))
+    assert not np.array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# Sequence.tokens memoization
+# ---------------------------------------------------------------------------
+
+def test_sequence_tokens_memoized():
+    seq = Sequence(Request(0, np.arange(5, dtype=np.int32), 4))
+    t0 = seq.tokens
+    assert t0 is seq.tokens                    # cached while unchanged
+    assert not t0.flags.writeable              # shared => read-only
+    seq.generated.append(7)
+    t1 = seq.tokens
+    assert t1 is not t0
+    np.testing.assert_array_equal(t1, np.r_[np.arange(5), 7].astype(np.int32))
+    assert t1 is seq.tokens                    # re-memoized at new length
+    with pytest.raises(ValueError):
+        t1[0] = 99                             # callers cannot corrupt it
