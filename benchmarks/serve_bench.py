@@ -47,6 +47,12 @@ prefill work positions by exactly the shared full-page token count
 (``prefill_chunk`` divides the shared length, so chunk savings are exact),
 while greedy outputs stay token-identical cache-on vs cache-off.
 
+A seventh axis (``api_overhead``) serves the same concurrent burst through
+the HTTP+SSE front door (serve/server.py, real sockets, one client thread
+per request) vs direct engine use, asserting token identity and that the
+API layer costs < 15% of direct tokens/sec, and reporting client-side TTFT
+percentiles (DESIGN.md Sec. 13).
+
 Emits a JSON comparison to stdout and --out (default
 artifacts/serve_bench.json); see benchmarks/README.md for the schema.
 """
@@ -393,6 +399,119 @@ def _run_prefix_axis(model, qparams, n_req, page_size=4, shared_pages=4):
     return axis
 
 
+def _run_api_overhead_axis(model, qparams, fast):
+    """API-overhead axis: the same concurrent burst served directly through
+    ``ContinuousEngine`` vs over the HTTP+SSE front door (serve/server.py),
+    with real sockets and one client thread per request. Asserts greedy
+    token identity across the two paths and that the HTTP layer costs
+    < 15% of direct-engine tokens/sec (best-of-3 each side; the engine
+    dominates, the front door must stay out of the way). Client-side TTFT
+    percentiles (request written -> first token frame) land in the JSON —
+    the latency a streaming user actually sees, queueing included.
+
+    Both paths run ``prefix_cache=False`` so repeat rounds against the
+    server's long-lived engine cannot skip prefill work the fresh direct
+    engines would have to do, and both run the production decode config
+    (``decode_horizon=8``, DESIGN.md Sec. 12) — one fused dispatch delivers
+    one token-bearing event per request, which is also what bounds the SSE
+    frame pipeline's per-token cost on small hosts."""
+    import json as _json
+    import socket
+    from concurrent.futures import ThreadPoolExecutor
+
+    from repro.serve import APIServer, ContinuousEngine
+
+    rng = np.random.default_rng(11)
+    n_req = 6 if fast else 12
+    # enough decode work that the per-burst fixed costs (sockets, HTTP
+    # parse, submit hand-off) sit in the per-token noise — the bound is
+    # about the steady-state tax, not connection setup
+    budget = 128 if fast else 160
+    reqs = [(rng.integers(0, 64, (int(rng.integers(4, 12)),))
+             .astype(np.int32), budget) for _ in range(n_req)]
+    eng_kw = dict(max_batch=8, page_size=4, num_pages=384, max_seq=192,
+                  prefill_chunk=8, prefix_cache=False, decode_horizon=8)
+
+    def direct_round():
+        eng = ContinuousEngine(model, qparams, **eng_kw)
+        t0 = time.perf_counter()
+        rids = [eng.submit(*r) for r in reqs]
+        outs = eng.run()
+        dt = time.perf_counter() - t0
+        return dt, eng.n_tokens_out, [outs[r].tolist() for r in rids]
+
+    direct_round()                                 # warm jit buckets
+    d_dt, d_tokens, refs = min((direct_round() for _ in range(3)),
+                               key=lambda r: r[0])
+
+    def sse_client(args):
+        host, port, (prompt, max_new) = args
+        body = _json.dumps({"prompt": prompt.tolist(),
+                            "max_tokens": max_new, "stream": True}).encode()
+        t0 = time.perf_counter()
+        s = socket.create_connection((host, port), timeout=600)
+        s.sendall((f"POST /v1/completions HTTP/1.1\r\nHost: b\r\n"
+                   f"Content-Type: application/json\r\n"
+                   f"Content-Length: {len(body)}\r\n\r\n").encode() + body)
+        buf, start, ttft = b"", None, None
+        while b"data: [DONE]\n\n" not in buf:
+            chunk = s.recv(65536)
+            assert chunk, "server closed the stream early"
+            buf += chunk
+            if start is None and b"\r\n\r\n" in buf:
+                start = buf.index(b"\r\n\r\n") + 4
+            if start is not None and ttft is None and b"\n\n" in buf[start:]:
+                ttft = time.perf_counter() - t0
+        s.close()
+        toks = []
+        for frame in buf[start:].decode().split("\n\n"):
+            if frame.startswith("data: ") and frame != "data: [DONE]":
+                toks.extend(_json.loads(frame[6:])["choices"][0]["token_ids"])
+        return ttft, toks
+
+    srv = APIServer(ContinuousEngine(model, qparams, **eng_kw))
+    host, port = srv.serve_background()
+    try:
+        jobs = [(host, port, r) for r in reqs]
+        ttfts, a_dt, a_tokens, api_outs = [], float("inf"), 0, None
+        with ThreadPoolExecutor(n_req) as pool:
+            list(pool.map(sse_client, jobs))       # warm the server path
+            for _ in range(3):
+                t0 = time.perf_counter()
+                results = list(pool.map(sse_client, jobs))
+                dt = time.perf_counter() - t0
+                ttfts.extend(t for t, _ in results)
+                if dt < a_dt:
+                    a_dt = dt
+                    api_outs = [toks for _, toks in results]
+                    a_tokens = sum(len(t) for t in api_outs)
+    finally:
+        srv.close()
+
+    ident = api_outs == refs
+    assert ident, "HTTP front door changed greedy tokens vs direct engine"
+    direct_tps = d_tokens / d_dt
+    api_tps = a_tokens / a_dt
+    overhead = 1.0 - api_tps / direct_tps
+    assert overhead < 0.15, (
+        f"HTTP+SSE overhead {overhead:.1%} exceeds 15% "
+        f"(direct {direct_tps:.0f} tok/s vs api {api_tps:.0f} tok/s)")
+    ms = sorted(1e3 * t for t in ttfts)
+    return {
+        "n_requests": n_req, "budget": budget,
+        "decode_horizon": eng_kw["decode_horizon"],
+        "direct": {"seconds": round(d_dt, 3), "tokens": d_tokens,
+                   "tokens_per_s": round(direct_tps, 1)},
+        "http": {"seconds": round(a_dt, 3), "tokens": a_tokens,
+                 "tokens_per_s": round(api_tps, 1)},
+        "overhead_frac": round(overhead, 4),
+        "outputs_identical": bool(ident),
+        "ttft_ms": {"p50": round(float(np.percentile(ms, 50)), 2),
+                    "p90": round(float(np.percentile(ms, 90)), 2),
+                    "max": round(ms[-1], 2), "n": len(ms)},
+    }
+
+
 def _run_continuous(model, params, reqs, arrivals, warm=True):
     from repro.serve import ContinuousEngine
 
@@ -497,6 +616,15 @@ def main():
               f"saved {v['positions_saved']} positions | work "
               f"{v['work_positions_off']} -> {v['work_positions_on']} | "
               f"identical {v['outputs_identical']}")
+
+    report["api_overhead"] = _run_api_overhead_axis(model, qparams, args.fast)
+    ao = report["api_overhead"]
+    print(f"[serve_bench] api_overhead axis: direct "
+          f"{ao['direct']['tokens_per_s']:.0f} tok/s | http "
+          f"{ao['http']['tokens_per_s']:.0f} tok/s | overhead "
+          f"{ao['overhead_frac']:+.1%} | ttft p50 {ao['ttft_ms']['p50']}ms "
+          f"p90 {ao['ttft_ms']['p90']}ms max {ao['ttft_ms']['max']}ms | "
+          f"identical {ao['outputs_identical']}")
 
     os.makedirs(os.path.dirname(args.out), exist_ok=True)
     with open(args.out, "w") as f:

@@ -1,0 +1,187 @@
+"""Serve an MSB-quantized model over the streaming HTTP front door.
+
+    PYTHONPATH=src python examples/serve_api.py                # serve forever
+    PYTHONPATH=src python examples/serve_api.py --self-check   # exercise + exit
+
+Builds a smoke-size model, quantizes it at load (4-bit MSB, dynamic-grouping
+DP solver — no calibration pass, so quantize-then-serve is one step), wraps
+it in ``ContinuousEngine`` at the production decode config
+(``decode_horizon=8``, prefix cache on), and exposes it through
+``APIServer`` (DESIGN.md Sec. 13):
+
+  * ``POST /v1/completions`` — OpenAI-style; ``prompt`` is token ids,
+    streaming responses are SSE ``data:`` frames ending in ``data: [DONE]``
+  * ``GET /v1/models`` / ``GET /healthz`` / ``GET /metrics``
+
+``--self-check`` starts the server in-process and drives it like a client:
+a streaming request (asserting the SSE framing contract), a non-stream
+request (asserting token identity against a direct ``ContinuousEngine``
+run of the same prompt — the front door must not change greedy tokens), a
+mid-stream disconnect (asserting the engine aborts the request and the
+page pool drains back to baseline), then scrapes ``/metrics`` to
+``--metrics-out``.
+"""
+import argparse
+import dataclasses
+import http.client
+import json
+import socket
+import time
+
+import numpy as np
+
+
+def build_engine(seed=0, **eng_kw):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import smoke_config
+    from repro.core import QuantPolicy, quantize_params
+    from repro.models import Model
+    from repro.serve import ContinuousEngine
+
+    cfg = smoke_config("internlm2-1.8b")
+    cfg = dataclasses.replace(cfg, vocab_size=64, vocab_round=64)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    params = jax.tree_util.tree_map(lambda p: p.astype(jnp.float32), params)
+    qparams, report = quantize_params(params, QuantPolicy(
+        bits=4, block=64, solver="dp", min_size=1024))
+    print(f"[serve_api] quantized {len(report)} tensors (4-bit MSB, "
+          "dp solver, no calibration)")
+    kw = dict(max_batch=8, page_size=4, num_pages=256, max_seq=128,
+              prefill_chunk=8, decode_horizon=8, max_waiting=32)
+    kw.update(eng_kw)
+    return ContinuousEngine(model, qparams, **kw)
+
+
+def _post(host, port, body):
+    conn = http.client.HTTPConnection(host, port, timeout=120)
+    conn.request("POST", "/v1/completions", json.dumps(body).encode(),
+                 {"Content-Type": "application/json"})
+    resp = conn.getresponse()
+    out = resp.status, json.loads(resp.read().decode())
+    conn.close()
+    return out
+
+
+def _stream(host, port, body, hang_up_after=None):
+    """Raw-socket SSE client. Returns (token_ids, finish_reason); if
+    ``hang_up_after`` is set, closes the socket after that many frames
+    (the mid-stream disconnect path)."""
+    payload = json.dumps(dict(body, stream=True)).encode()
+    s = socket.create_connection((host, port), timeout=120)
+    s.sendall((f"POST /v1/completions HTTP/1.1\r\nHost: x\r\n"
+               f"Content-Type: application/json\r\n"
+               f"Content-Length: {len(payload)}\r\n\r\n").encode() + payload)
+    buf = b""
+    while b"\r\n\r\n" not in buf:
+        buf += s.recv(65536)
+    head, buf = buf.split(b"\r\n\r\n", 1)
+    assert b"200 OK" in head and b"text/event-stream" in head, head
+    toks, reason, n_frames = [], None, 0
+    while True:
+        while b"\n\n" in buf:
+            frame, buf = buf.split(b"\n\n", 1)
+            assert frame.startswith(b"data: "), f"bad SSE framing: {frame!r}"
+            n_frames += 1
+            if frame == b"data: [DONE]":
+                s.close()
+                return toks, reason
+            chunk = json.loads(frame[6:])["choices"][0]
+            toks.extend(chunk["token_ids"])
+            reason = chunk["finish_reason"]
+            if hang_up_after is not None and n_frames >= hang_up_after:
+                s.close()                      # client walks away mid-stream
+                return toks, None
+        data = s.recv(65536)
+        assert data, "server closed the stream before [DONE]"
+        buf += data
+
+
+def self_check(srv, host, port, metrics_out):
+    from repro.serve import ContinuousEngine
+
+    eng = srv.engine_loop.engine
+    rng = np.random.default_rng(7)
+    prompt = rng.integers(0, 64, (9,)).astype(np.int32)
+    body = {"prompt": prompt.tolist(), "max_tokens": 24}
+
+    # reference: the same prompt through a direct engine (same config)
+    ref_eng = ContinuousEngine(eng.model, eng.params, max_batch=8,
+                               page_size=4, num_pages=256, max_seq=128,
+                               prefill_chunk=8, decode_horizon=8)
+    rid = ref_eng.submit(prompt, 24)
+    ref = ref_eng.run()[rid].tolist()
+
+    toks, reason = _stream(host, port, body)
+    assert toks == ref, "streamed tokens differ from direct engine"
+    assert reason == "length", reason
+    print(f"[self-check] stream: {len(toks)} tokens, SSE framing ok, "
+          "token-identical to direct engine")
+
+    status, resp = _post(host, port, body)
+    assert status == 200 and \
+        resp["choices"][0]["token_ids"] == ref, "non-stream mismatch"
+    assert resp["usage"]["completion_tokens"] == len(ref)
+    print(f"[self-check] non-stream: 200, usage={resp['usage']}")
+
+    aborts0 = eng.scheduler.n_aborts
+    partial, _ = _stream(host, port,
+                         {"prompt": prompt.tolist(), "max_tokens": 100},
+                         hang_up_after=2)
+    deadline = time.monotonic() + 15
+    cache = eng.cache
+    while time.monotonic() < deadline and (
+            eng.scheduler.n_aborts == aborts0
+            or cache.n_free_pages + cache.n_cached_pages
+            < cache.num_pages - 1):
+        time.sleep(0.05)
+    assert eng.scheduler.n_aborts == aborts0 + 1, "disconnect did not abort"
+    assert (cache.n_free_pages + cache.n_cached_pages
+            == cache.num_pages - 1), "pages leaked after disconnect"
+    print(f"[self-check] disconnect after {len(partial)} tokens: engine "
+          "aborted the request, page pool back to baseline")
+
+    conn = http.client.HTTPConnection(host, port, timeout=30)
+    conn.request("GET", "/metrics")
+    scrape = conn.getresponse().read().decode()
+    conn.close()
+    assert "msb_ttft_seconds_count" in scrape
+    if metrics_out:
+        with open(metrics_out, "w") as f:
+            f.write(scrape)
+        print(f"[self-check] /metrics scrape -> {metrics_out} "
+              f"({len(scrape.splitlines())} lines)")
+    print("[self-check] all assertions passed")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8000)
+    ap.add_argument("--self-check", action="store_true",
+                    help="start in-process, exercise the API, then exit")
+    ap.add_argument("--metrics-out", default=None,
+                    help="with --self-check: write the /metrics scrape here")
+    args = ap.parse_args()
+
+    from repro.serve import APIServer
+
+    engine = build_engine()
+    srv = APIServer(engine, host=args.host,
+                    port=0 if args.self_check else args.port,
+                    max_timeout_s=300.0)
+    if not args.self_check:
+        srv.run()                               # blocks until interrupted
+        return
+    host, port = srv.serve_background()
+    print(f"[serve_api] self-check against http://{host}:{port}")
+    try:
+        self_check(srv, host, port, args.metrics_out)
+    finally:
+        srv.close()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,9 +1,16 @@
 from .continuous import ContinuousEngine
 from .engine import ServeEngine
+from .lifecycle import (CompletionParams, RequestLifecycle, ValidationError,
+                        parse_completion_request)
+from .metrics import Counter, Gauge, Histogram, Registry, ServeMetrics
 from .paged_cache import (OutOfPages, PagedKVCache, PageStateError,
                           PrefixMatch)
-from .scheduler import Request, Scheduler, Sequence
+from .scheduler import Request, Saturated, Scheduler, Sequence
+from .server import APIServer, EngineLoop
 
-__all__ = ["ContinuousEngine", "OutOfPages", "PagedKVCache",
-           "PageStateError", "PrefixMatch", "Request", "Scheduler",
-           "Sequence", "ServeEngine"]
+__all__ = ["APIServer", "CompletionParams", "ContinuousEngine", "Counter",
+           "EngineLoop", "Gauge", "Histogram", "OutOfPages", "PagedKVCache",
+           "PageStateError", "PrefixMatch", "Registry", "Request",
+           "RequestLifecycle", "Saturated", "Scheduler", "Sequence",
+           "ServeEngine", "ServeMetrics", "ValidationError",
+           "parse_completion_request"]

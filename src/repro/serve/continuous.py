@@ -50,7 +50,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -99,6 +99,7 @@ class ContinuousEngine:
     mesh: object = None               # tensor-parallel device mesh
     prefix_cache: bool = True         # automatic cross-request prefix reuse
     decode_horizon: int = 1           # fused decode steps per dispatch
+    max_waiting: Optional[int] = None  # backpressure: bound on waiting queue
 
     def __post_init__(self):
         from .engine import resolve_execution
@@ -125,7 +126,8 @@ class ContinuousEngine:
             prefix_cache=self.prefix_cache)
         self.scheduler = Scheduler(self.cache, self.max_batch,
                                    self.prefill_chunk,
-                                   decode_horizon=self.decode_horizon)
+                                   decode_horizon=self.decode_horizon,
+                                   max_waiting=self.max_waiting)
         if self.mesh is not None:
             self._init_tensor_parallel()
         elif self.parallel is None:
@@ -144,6 +146,8 @@ class ContinuousEngine:
         self._next_id = 0
         self._seqs: Dict[int, Sequence] = {}
         self._finished: Dict[int, np.ndarray] = {}
+        self._stream_off: Dict[int, int] = {}   # tokens already streamed
+        self.n_aborts = 0             # abort_request cancellations
         self.n_steps = 0
         self.n_decode_steps = 0       # decode dispatches (any horizon)
         self.n_host_syncs = 0         # blocking device->host transfers
@@ -217,8 +221,11 @@ class ContinuousEngine:
         until a ``step()``. Raises ``ValueError`` if ``prompt`` plus
         ``max_new_tokens`` can never fit the page pool (admission control —
         an accepted request is guaranteed to eventually complete, through
-        preemption if need be). Generation stops after ``max_new_tokens``
-        or on the first ``eos_id`` (which is included in the output).
+        preemption if need be), and ``Saturated`` when backpressure is on
+        (``max_waiting=``) and the waiting queue or page-demand bound is
+        exceeded — a transient condition the caller should retry (HTTP
+        429). Generation stops after ``max_new_tokens`` or on the first
+        ``eos_id`` (which is included in the output).
         """
         req_id = self._next_id
         self._next_id += 1
@@ -226,6 +233,16 @@ class ContinuousEngine:
                       int(max_new_tokens), eos_id)
         self._seqs[req_id] = self.scheduler.submit(req)
         return req_id
+
+    def would_accept(self, prompt_len, max_new_tokens) -> Optional[Exception]:
+        """Mutation-free admission probe: ``None`` when a ``submit`` of this
+        size issued right now would be accepted, else the exception it would
+        raise (``ValueError`` = can never fit, ``scheduler.Saturated`` =
+        busy, retry later). Safe to call from a thread other than the one
+        driving ``step()`` — it only reads counters, and ``submit``
+        re-validates, so a stale answer costs one exception, never state."""
+        return self.scheduler.would_accept(int(prompt_len)
+                                           + int(max_new_tokens))
 
     def step(self) -> bool:
         """Run one scheduler-chosen unit of work (one prefill chunk or one
@@ -298,12 +315,65 @@ class ContinuousEngine:
             new_ids.append(new_id)
         return new_ids
 
+    def abort_request(self, req_id) -> bool:
+        """Cancel a request at any point in its lifecycle (client
+        disconnect, server timeout). Frees everything it holds: a waiting
+        request leaves the queue; a running one releases its slot — all its
+        pages, including any outstanding decode-horizon lease, return to
+        the allocator, and pages it adopted from (or registered into) the
+        prefix cache are decref'd onto the reclaimable LRU. Pool accounting
+        returns to baseline: nothing leaks (negative-tested).
+
+        Returns True if the request was cancelled, False if it had already
+        finished — in which case its uncollected output is *dropped* (the
+        caller no longer wants it). Raises ``KeyError`` for ids never
+        submitted or already collected/streamed. Must be called from the
+        thread driving ``step()`` (the engine is single-threaded; a server
+        serializes aborts through its engine loop)."""
+        seq = self._seqs.pop(req_id, None)
+        if seq is None:
+            raise KeyError(f"unknown request id {req_id}")
+        self._stream_off.pop(req_id, None)
+        self._finished.pop(req_id, None)
+        ok = self.scheduler.abort(seq)
+        if ok:
+            self.n_aborts += 1
+        return ok
+
     def collect(self) -> Dict[int, np.ndarray]:
         """Drain outputs finished since the last ``collect()``: a dict
         ``req_id -> int32 generated tokens`` (prompt not included). Each
         finished request is returned exactly once; uncollected results are
         held, never dropped."""
         out, self._finished = self._finished, {}
+        return out
+
+    def stream_updates(self) -> Dict[int, Tuple[List[int], bool]]:
+        """Per-token streaming drain: ``{req_id: (new_tokens, finished)}``
+        for every request that produced tokens (or finished) since the last
+        call. The streaming complement to ``collect()`` — call it after
+        each ``step()`` to observe tokens as they are sampled instead of
+        waiting for completion. Tokens are reported exactly once and in
+        order (``generated`` is append-only, even across preemption, so
+        offsets never rewind); with ``decode_horizon=H`` up to H tokens
+        arrive per call. A finished request is reported with
+        ``finished=True`` exactly once and then fully retired: it leaves
+        the ``collect()`` buffer too, so use one drain style per request,
+        not both."""
+        out: Dict[int, Tuple[List[int], bool]] = {}
+        for rid in list(self._seqs):
+            seq = self._seqs[rid]
+            off = self._stream_off.get(rid, 0)
+            new = [int(t) for t in seq.generated[off:]]
+            done = seq.state == FINISHED
+            if new or done:
+                out[rid] = (new, done)
+            if done:
+                del self._seqs[rid]
+                self._stream_off.pop(rid, None)
+                self._finished.pop(rid, None)
+            elif new:
+                self._stream_off[rid] = off + len(new)
         return out
 
     # -- metrics -------------------------------------------------------------

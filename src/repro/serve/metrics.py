@@ -1,0 +1,309 @@
+"""Prometheus-text-format metrics for the serving front door.
+
+A tiny, dependency-free subset of the Prometheus client model — counters,
+gauges and histograms with optional labels, rendered in text exposition
+format 0.0.4 (the format every Prometheus/VictoriaMetrics/Grafana-agent
+scraper speaks) — plus ``ServeMetrics``, the registry wired to the counters
+the engine already exposes.
+
+Design constraints, in order:
+
+* **Hot-loop cheap.** ``observe``/``inc``/``set`` are a dict lookup and a
+  float add; no locks (the engine step-loop thread is the only writer of
+  engine-derived series, and scrape-time readers tolerate torn-but-recent
+  values — each individual Python float read is atomic under the GIL).
+* **Monotonic counters.** Prometheus ``rate()`` treats any decrease as a
+  counter reset. ``Counter.inc`` rejects negative deltas and
+  ``Counter.set_to`` (the bridge from the engine's own monotonic counters,
+  e.g. ``n_decode_steps``) rejects regressions, so a wiring bug fails
+  loudly here instead of silently corrupting dashboards.
+* **Deterministic render.** Families render in registration order, children
+  in sorted-label order, so the text output is stable enough to golden-test.
+
+Timing semantics (used by ``lifecycle.RequestLifecycle``): TTFT is observed
+once per request, at the arrival of the event carrying its first token —
+chunked prefill just makes that event later. Inter-token latency observes
+**one value per token-bearing arrival gap**, not per token: with
+``decode_horizon=H`` the engine delivers up to H tokens per dispatch, and
+recording H identical gaps would fabricate H-1 latencies no client ever
+saw. The ITL histogram therefore measures the stall a streaming consumer
+actually experiences between flushes.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+# Prometheus-recommended latency buckets, extended down to 1ms: CPU smoke
+# runs sit in the 1-50ms/token range, real accelerators below that.
+LATENCY_BUCKETS = (0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25,
+                   0.5, 1.0, 2.5, 5.0, 10.0)
+
+_LABEL_ESC = str.maketrans({"\\": r"\\", '"': r"\"", "\n": r"\n"})
+
+
+def _fmt(v: float) -> str:
+    """Prometheus sample-value formatting: integers without the trailing
+    ``.0``, infinities as ``+Inf``/``-Inf``."""
+    if v == math.inf:
+        return "+Inf"
+    if v == -math.inf:
+        return "-Inf"
+    f = float(v)
+    if f.is_integer():
+        return str(int(f))
+    return repr(f)
+
+
+def _labelstr(labels: Tuple[Tuple[str, str], ...]) -> str:
+    if not labels:
+        return ""
+    inner = ",".join(f'{k}="{str(v).translate(_LABEL_ESC)}"'
+                     for k, v in labels)
+    return "{" + inner + "}"
+
+
+class _Metric:
+    kind = "untyped"
+
+    def __init__(self, name: str, help: str,
+                 labelnames: Sequence[str] = ()):
+        self.name = name
+        self.help = help
+        self.labelnames = tuple(labelnames)
+        self._children: Dict[Tuple[Tuple[str, str], ...], object] = {}
+
+    def _key(self, labels: Dict[str, str]):
+        if set(labels) != set(self.labelnames):
+            raise ValueError(f"{self.name}: expected labels "
+                             f"{self.labelnames}, got {tuple(labels)}")
+        return tuple((k, str(labels[k])) for k in self.labelnames)
+
+    def _child(self, labels):
+        key = self._key(labels)
+        child = self._children.get(key)
+        if child is None:
+            child = self._children[key] = self._new_child()
+        return child
+
+    def render(self) -> List[str]:
+        lines = [f"# HELP {self.name} {self.help}",
+                 f"# TYPE {self.name} {self.kind}"]
+        for key in sorted(self._children):
+            lines.extend(self._render_child(key, self._children[key]))
+        return lines
+
+
+class Counter(_Metric):
+    kind = "counter"
+
+    def _new_child(self):
+        return [0.0]
+
+    def inc(self, amount: float = 1.0, **labels):
+        if amount < 0:
+            raise ValueError(f"{self.name}: counters only go up "
+                             f"(inc {amount})")
+        self._child(labels)[0] += amount
+
+    def set_to(self, value: float, **labels):
+        """Ratchet to an externally-maintained monotonic value (the bridge
+        from engine counters like ``n_decode_steps``); a regression is a
+        wiring bug and raises."""
+        child = self._child(labels)
+        if value < child[0]:
+            raise ValueError(f"{self.name}: monotonic counter cannot go "
+                             f"from {child[0]} to {value}")
+        child[0] = float(value)
+
+    def value(self, **labels) -> float:
+        return self._child(labels)[0]
+
+    def _render_child(self, key, child):
+        return [f"{self.name}{_labelstr(key)} {_fmt(child[0])}"]
+
+
+class Gauge(_Metric):
+    kind = "gauge"
+
+    def _new_child(self):
+        return [0.0]
+
+    def set(self, value: float, **labels):
+        self._child(labels)[0] = float(value)
+
+    def inc(self, amount: float = 1.0, **labels):
+        self._child(labels)[0] += amount
+
+    def dec(self, amount: float = 1.0, **labels):
+        self._child(labels)[0] -= amount
+
+    def value(self, **labels) -> float:
+        return self._child(labels)[0]
+
+    def _render_child(self, key, child):
+        return [f"{self.name}{_labelstr(key)} {_fmt(child[0])}"]
+
+
+class Histogram(_Metric):
+    kind = "histogram"
+
+    def __init__(self, name, help, labelnames=(),
+                 buckets: Sequence[float] = LATENCY_BUCKETS):
+        super().__init__(name, help, labelnames)
+        bs = tuple(sorted(float(b) for b in buckets))
+        if not bs:
+            raise ValueError(f"{name}: need at least one bucket")
+        self.buckets = bs
+
+    def _new_child(self):
+        # per-bucket non-cumulative counts + [sum, count]
+        return {"counts": [0] * (len(self.buckets) + 1), "sum": 0.0,
+                "count": 0}
+
+    def observe(self, value: float, **labels):
+        child = self._child(labels)
+        i = len(self.buckets)
+        for j, b in enumerate(self.buckets):    # ~13 buckets: linear is fine
+            if value <= b:
+                i = j
+                break
+        child["counts"][i] += 1
+        child["sum"] += float(value)
+        child["count"] += 1
+
+    def count(self, **labels) -> int:
+        return self._child(labels)["count"]
+
+    def sum(self, **labels) -> float:
+        return self._child(labels)["sum"]
+
+    def percentile(self, q: float, **labels) -> Optional[float]:
+        """Bucket-resolution percentile (upper bound of the bucket holding
+        the q-quantile observation) — what a PromQL ``histogram_quantile``
+        would report. None with no observations."""
+        child = self._child(labels)
+        if child["count"] == 0:
+            return None
+        rank = q * child["count"]
+        cum = 0
+        for j, b in enumerate(self.buckets):
+            cum += child["counts"][j]
+            if cum >= rank:
+                return b
+        return math.inf
+
+    def _render_child(self, key, child):
+        lines, cum = [], 0
+        for j, b in enumerate(self.buckets):
+            cum += child["counts"][j]
+            lk = key + (("le", _fmt(b)),)
+            lines.append(f"{self.name}_bucket{_labelstr(lk)} {cum}")
+        cum += child["counts"][-1]
+        lk = key + (("le", "+Inf"),)
+        lines.append(f"{self.name}_bucket{_labelstr(lk)} {cum}")
+        lines.append(f"{self.name}_sum{_labelstr(key)} {_fmt(child['sum'])}")
+        lines.append(f"{self.name}_count{_labelstr(key)} {cum}")
+        return lines
+
+
+class Registry:
+    """Ordered collection of metric families with one text renderer."""
+
+    CONTENT_TYPE = "text/plain; version=0.0.4; charset=utf-8"
+
+    def __init__(self):
+        self._metrics: Dict[str, _Metric] = {}
+
+    def _register(self, metric):
+        if metric.name in self._metrics:
+            raise ValueError(f"duplicate metric {metric.name}")
+        self._metrics[metric.name] = metric
+        return metric
+
+    def counter(self, name, help, labelnames=()) -> Counter:
+        return self._register(Counter(name, help, labelnames))
+
+    def gauge(self, name, help, labelnames=()) -> Gauge:
+        return self._register(Gauge(name, help, labelnames))
+
+    def histogram(self, name, help, labelnames=(),
+                  buckets=LATENCY_BUCKETS) -> Histogram:
+        return self._register(Histogram(name, help, labelnames, buckets))
+
+    def render(self) -> str:
+        lines: List[str] = []
+        for metric in self._metrics.values():
+            lines.extend(metric.render())
+        return "\n".join(lines) + "\n"
+
+
+class ServeMetrics:
+    """The serving front door's metric set, wired from the counters the
+    engine/scheduler/cache already maintain plus the per-request timing the
+    lifecycle layer records.
+
+    Two write paths: the request path (``ttft``/``itl``/``requests``,
+    written by ``RequestLifecycle`` as events happen) and ``sync_engine``,
+    called by the engine step-loop each tick and at scrape time to ratchet
+    the engine's own monotonic counters into Prometheus families. Both run
+    on the engine-loop thread, so no locking."""
+
+    def __init__(self, registry: Optional[Registry] = None):
+        r = self.registry = registry or Registry()
+        self.ttft = r.histogram(
+            "msb_ttft_seconds",
+            "Time from request acceptance to its first generated token")
+        self.itl = r.histogram(
+            "msb_inter_token_seconds",
+            "Gap between consecutive token-bearing stream flushes of one "
+            "request (one observation per gap, however many tokens a "
+            "decode-horizon dispatch delivers at once)")
+        self.queue_depth = r.gauge(
+            "msb_queue_depth", "Requests waiting for admission")
+        self.running = r.gauge(
+            "msb_running_requests", "Requests holding a KV-cache slot")
+        self.requests = r.counter(
+            "msb_requests_total", "Completed API requests by outcome",
+            labelnames=("outcome",))
+        self.tokens = r.counter(
+            "msb_tokens_generated_total", "Tokens sampled by the engine")
+        self.dispatches = r.counter(
+            "msb_dispatches_total", "Jitted device dispatches (any kind)")
+        self.decode_dispatches = r.counter(
+            "msb_decode_dispatches_total", "Decode dispatches (any horizon)")
+        self.host_syncs = r.counter(
+            "msb_host_syncs_total", "Blocking device-to-host transfers")
+        self.preemptions = r.counter(
+            "msb_preemptions_total", "Sequences evicted for recompute")
+        self.aborts = r.counter(
+            "msb_aborts_total", "Requests cancelled before finishing")
+        self.prefix_hits = r.counter(
+            "msb_prefix_hits_total",
+            "Admissions that longest-prefix-matched the page registry")
+        self.prefix_positions_saved = r.counter(
+            "msb_prefix_positions_saved_total",
+            "Token positions adopted from the prefix cache, not prefilled")
+        self.prefix_hit_rate = r.gauge(
+            "msb_prefix_hit_rate",
+            "Fraction of admissions that hit the prefix cache")
+
+    def sync_engine(self, engine):
+        """Ratchet engine/scheduler counters and refresh gauges. Engine
+        counters are monotonic by construction; ``set_to`` enforces it."""
+        sched = engine.scheduler
+        self.queue_depth.set(len(sched.waiting))
+        self.running.set(len(sched.running))
+        self.tokens.set_to(engine.n_tokens_out)
+        self.dispatches.set_to(engine.n_steps)
+        self.decode_dispatches.set_to(engine.n_decode_steps)
+        self.host_syncs.set_to(engine.n_host_syncs)
+        self.preemptions.set_to(sched.n_preemptions)
+        self.aborts.set_to(engine.n_aborts)
+        self.prefix_hits.set_to(engine.n_prefix_hits)
+        self.prefix_positions_saved.set_to(engine.n_prefix_positions_saved)
+        self.prefix_hit_rate.set(
+            engine.n_prefix_hits / max(sched.n_admissions, 1))
+
+    def render(self) -> str:
+        return self.registry.render()

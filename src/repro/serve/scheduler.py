@@ -46,6 +46,14 @@ from .paged_cache import OutOfPages, PagedKVCache
 PREFILL, DECODE, FINISHED = "prefill", "decode", "finished"
 
 
+class Saturated(RuntimeError):
+    """A submit was refused for *transient* load reasons (waiting queue
+    full, page pool oversubscribed) — distinct from the permanent
+    ``ValueError`` a request that can *never* fit gets. Callers should shed
+    load (HTTP 429 + Retry-After) and may retry the identical request
+    later. Only raised when backpressure is enabled (``max_waiting=``)."""
+
+
 @dataclasses.dataclass
 class Request:
     req_id: int
@@ -100,27 +108,101 @@ class Sequence:
 
 class Scheduler:
     def __init__(self, cache: PagedKVCache, max_batch: int,
-                 prefill_chunk: int, decode_horizon: int = 1):
+                 prefill_chunk: int, decode_horizon: int = 1,
+                 max_waiting: Optional[int] = None,
+                 oversubscribe: float = 2.0):
         self.cache = cache
         self.max_batch = max_batch
         self.prefill_chunk = prefill_chunk
         self.decode_horizon = int(decode_horizon)
+        # backpressure (None = unbounded queueing, the pre-server behavior):
+        # max_waiting bounds the waiting queue; oversubscribe bounds the
+        # outstanding page demand of admitted-but-unfinished work to a
+        # multiple of the pool, so a burst of feasible-but-huge requests is
+        # shed instead of queued behind a full pool-drain of work
+        self.max_waiting = max_waiting if max_waiting is None \
+            else int(max_waiting)
+        self.oversubscribe = float(oversubscribe)
         self.waiting: Deque[Sequence] = deque()
         self.running: List[Sequence] = []
         self._last_was_prefill = False
         self.n_preemptions = 0
+        self.n_admissions = 0         # waiting -> running transitions
+        self.n_aborts = 0             # requests cancelled before finishing
         self.n_prefix_hits = 0        # admissions that matched the registry
         self.n_prefix_tokens = 0      # positions adopted instead of prefilled
 
     # -- queue entry points -------------------------------------------------
+    def would_accept(self, n_tokens: int) -> Optional[Exception]:
+        """Cheap, mutation-free admission probe for ``n_tokens`` (prompt +
+        max_new_tokens). Returns ``None`` when a ``submit`` issued right now
+        would be accepted, otherwise the exception instance a submit would
+        raise: ``ValueError`` for permanent infeasibility (the request can
+        never fit this pool) or ``Saturated`` for transient backpressure
+        (retry later). A server front door calls this before mutating any
+        state so a 429/400 costs no allocator work; ``submit`` re-checks,
+        so the probe->submit race is benign."""
+        why = self.cache.capacity_error(n_tokens)
+        if why is not None:
+            return ValueError(why)
+        if self.max_waiting is None:
+            return None                       # backpressure disabled
+        if len(self.waiting) >= self.max_waiting:
+            # queue full — but an empty queue + free slot + pool headroom
+            # means immediate admission, which max_waiting=0 ("no queueing")
+            # must still allow
+            if not (not self.waiting and len(self.running) < self.max_batch
+                    and self.cache.n_free_slots > 0
+                    and self.cache.pages_for(n_tokens)
+                    <= self.cache.n_available_pages):
+                return Saturated(
+                    f"waiting queue full ({len(self.waiting)} waiting, "
+                    f"max_waiting={self.max_waiting})")
+        demand = sum(
+            self.cache.pages_for(len(s.req.prompt) + s.req.max_new_tokens)
+            for s in self.running) + sum(
+            self.cache.pages_for(len(s.req.prompt) + s.req.max_new_tokens)
+            for s in self.waiting)
+        usable = self.cache.num_pages - 1
+        if demand + self.cache.pages_for(n_tokens) \
+                > self.oversubscribe * usable:
+            return Saturated(
+                f"page pool saturated ({demand} pages of work outstanding "
+                f"against {usable} usable pages, "
+                f"oversubscribe={self.oversubscribe})")
+        return None
+
     def submit(self, request: Request) -> Sequence:
         total = len(request.prompt) + request.max_new_tokens
-        why = self.cache.capacity_error(total)
-        if why is not None:        # names the limit that actually rejected
-            raise ValueError(f"request {request.req_id}: {why}")
+        err = self.would_accept(total)
+        if err is not None:        # names the limit that actually rejected
+            raise type(err)(f"request {request.req_id}: {err}")
         seq = Sequence(request)
         self.waiting.append(seq)
         return seq
+
+    def abort(self, seq: Sequence) -> bool:
+        """Cancel ``seq`` wherever it is in its lifecycle. A waiting
+        sequence is dropped from the queue; a running one releases its slot
+        — every page it holds (committed, leased-but-unwritten horizon
+        pages, and adopted prefix pages alike) is decref'd by
+        ``cache.release``, so registered pages park on the prefix-cache LRU
+        (reclaimable, not leaked) and everything else returns to the free
+        list. Returns False (no-op) when the sequence already finished."""
+        if seq.state == FINISHED:
+            return False
+        if seq.slot >= 0:
+            self.cache.release(seq.slot)
+            seq.slot = -1
+            self.running.remove(seq)
+        else:
+            try:
+                self.waiting.remove(seq)
+            except ValueError:
+                pass                          # already gone
+        seq.state = FINISHED
+        self.n_aborts += 1
+        return True
 
     @property
     def has_work(self):
@@ -153,6 +235,7 @@ class Scheduler:
             if need > avail:
                 break
             self.waiting.popleft()
+            self.n_admissions += 1
             seq.slot = self.cache.alloc_slot()
             seq.cache_len = 0
             if match is not None:

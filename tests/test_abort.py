@@ -1,0 +1,220 @@
+"""Request cancellation + admission backpressure: nothing leaks.
+
+``ContinuousEngine.abort_request`` must return the allocator to baseline
+whatever the request was doing — waiting, mid-chunked-prefill, decoding
+under an outstanding decode-horizon lease, or sharing prefix-cache pages —
+and ``Scheduler.would_accept`` must shed load without mutating state.
+"""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import smoke_config
+from repro.models import Model
+from repro.serve import ContinuousEngine, Saturated
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = smoke_config("internlm2-1.8b")
+    cfg = dataclasses.replace(cfg, vocab_size=64, vocab_round=64)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    params = jax.tree_util.tree_map(lambda p: p.astype(jnp.float32), params)
+    return model, params
+
+
+def _assert_pool_baseline(cache):
+    """Every page is free or parked cached-but-alive on the prefix LRU; no
+    refcounts, no slots, no dangling registry entries."""
+    assert cache.n_free_pages + cache.n_cached_pages == cache.num_pages - 1
+    assert (cache.ref_counts[1:] == 0).all() and cache.ref_counts[0] == 1
+    assert cache.n_free_slots == cache.max_seqs
+    # a registered page with no referents must be exactly the LRU set
+    assert set(cache._page_digest) == set(cache._lru)
+
+
+def _prompt(rng, n=6):
+    return rng.integers(0, 64, (n,)).astype(np.int32)
+
+
+def test_abort_waiting_request(setup, rng):
+    model, params = setup
+    eng = ContinuousEngine(model, params, max_batch=2, page_size=4,
+                           num_pages=32, prefill_chunk=8)
+    keep = eng.submit(_prompt(rng), 4)
+    gone = eng.submit(_prompt(rng), 4)       # never stepped: still waiting
+    assert eng.abort_request(gone) is True
+    done = eng.run()
+    assert sorted(done) == [keep]
+    _assert_pool_baseline(eng.cache)
+    assert eng.n_aborts == 1 and eng.scheduler.n_aborts == 1
+
+
+def test_abort_running_mid_decode_leaves_peer_identical(setup, rng):
+    model, params = setup
+    reqs = [(_prompt(rng), 8), (_prompt(rng), 8)]
+    solo = ContinuousEngine(model, params, max_batch=2, page_size=4,
+                            num_pages=32, prefill_chunk=8)
+    rid = solo.submit(*reqs[0])
+    ref = solo.run()[rid]
+    eng = ContinuousEngine(model, params, max_batch=2, page_size=4,
+                           num_pages=32, prefill_chunk=8)
+    a = eng.submit(*reqs[0])
+    b = eng.submit(*reqs[1])
+    for _ in range(6):                       # both prefilled + decoding
+        eng.step()
+    assert eng.abort_request(b) is True
+    done = eng.run()
+    assert sorted(done) == [a]
+    np.testing.assert_array_equal(done[a], ref)
+    _assert_pool_baseline(eng.cache)
+
+
+def test_abort_under_outstanding_horizon_lease(setup, rng):
+    """decode_horizon=8 reserves the whole lease up front; aborting between
+    horizon dispatches must return leased-but-unwritten pages too."""
+    model, params = setup
+    eng = ContinuousEngine(model, params, max_batch=2, page_size=2,
+                           num_pages=64, prefill_chunk=8, decode_horizon=8)
+    # odd prompt length: the committed extent after a full horizon dispatch
+    # lands mid-page, so the reservation provably extends past it
+    rid = eng.submit(_prompt(rng, 5), 24)
+    while not any(s.state == "decode" for s in eng.scheduler.running):
+        eng.step()
+    eng.step()                               # one horizon dispatch done
+    seq = eng.scheduler.running[0]
+    assert eng.cache.n_covered_tokens(seq.slot) > seq.cache_len, \
+        "test needs an outstanding lease beyond the committed extent"
+    assert eng.abort_request(rid) is True
+    assert eng.run() == {}
+    _assert_pool_baseline(eng.cache)
+
+
+def test_abort_releases_prefix_refs_shared_pages_survive(setup, rng):
+    """Abort a request that adopted registry pages: the refcounts drop,
+    the pages stay adoptable, and a later identical request still hits."""
+    model, params = setup
+    shared = _prompt(rng, 16)                # 4 full pages at page_size=4
+    eng = ContinuousEngine(model, params, max_batch=2, page_size=4,
+                           num_pages=64, prefill_chunk=4)
+    first = eng.submit(np.concatenate([shared, _prompt(rng, 3)]), 4)
+    out_first = eng.run()[first]
+    assert out_first is not None
+    second = eng.submit(np.concatenate([shared, _prompt(rng, 2)]), 4)
+    eng.step()                               # admit (adopts prefix pages)
+    assert eng.n_prefix_hits == 1
+    assert eng.abort_request(second) is True
+    assert eng.run() == {}
+    _assert_pool_baseline(eng.cache)
+    third = eng.submit(np.concatenate([shared, _prompt(rng, 2)]), 4)
+    out = eng.run()
+    assert eng.n_prefix_hits == 2 and sorted(out) == [third]
+    _assert_pool_baseline(eng.cache)
+
+
+def test_abort_finished_uncollected_drops_result(setup, rng):
+    model, params = setup
+    eng = ContinuousEngine(model, params, max_batch=2, page_size=4,
+                           num_pages=32, prefill_chunk=8)
+    rid = eng.submit(_prompt(rng), 2)
+    while eng.step():
+        pass
+    assert eng.abort_request(rid) is False   # finished: abort is a no-op...
+    assert eng.collect() == {}               # ...but the output is dropped
+    assert eng.n_aborts == 0
+    _assert_pool_baseline(eng.cache)
+
+
+def test_abort_unknown_or_twice_raises(setup, rng):
+    model, params = setup
+    eng = ContinuousEngine(model, params, max_batch=2, page_size=4,
+                           num_pages=32, prefill_chunk=8)
+    with pytest.raises(KeyError):
+        eng.abort_request(123)
+    rid = eng.submit(_prompt(rng), 2)
+    assert eng.abort_request(rid) is True
+    with pytest.raises(KeyError):
+        eng.abort_request(rid)
+
+
+def test_stream_updates_incremental_and_exactly_once(setup, rng):
+    model, params = setup
+    eng = ContinuousEngine(model, params, max_batch=2, page_size=4,
+                           num_pages=32, prefill_chunk=8)
+    solo = ContinuousEngine(model, params, max_batch=2, page_size=4,
+                            num_pages=32, prefill_chunk=8)
+    p = _prompt(rng)
+    srid = solo.submit(p, 9)
+    ref = solo.run()[srid]
+    rid = eng.submit(p, 9)
+    got, finished = [], False
+    while eng.step():
+        for r, (new, done) in eng.stream_updates().items():
+            assert r == rid
+            got.extend(new)
+            finished = finished or done
+    for r, (new, done) in eng.stream_updates().items():
+        got.extend(new)
+        finished = finished or done
+    assert finished and np.array_equal(np.asarray(got, np.int32), ref)
+    assert eng.collect() == {}               # streamed requests are retired
+    assert eng.stream_updates() == {}        # nothing reported twice
+
+
+def test_would_accept_capacity_vs_saturation(setup, rng):
+    model, params = setup
+    eng = ContinuousEngine(model, params, max_batch=2, page_size=2,
+                           num_pages=9, prefill_chunk=4, max_waiting=1)
+    # permanent: can never fit -> ValueError (probe and submit agree)
+    err = eng.would_accept(10, 8)
+    assert isinstance(err, ValueError) and not isinstance(err, Saturated)
+    with pytest.raises(ValueError):
+        eng.submit(np.zeros(10, np.int32), 8)
+    # feasible and idle -> accepted
+    assert eng.would_accept(4, 2) is None
+    a = eng.submit(_prompt(rng, 4), 2)
+    eng.step()                               # a admitted: queue drains
+    # queue bound: one waiting request is allowed, the next is shed
+    b = eng.submit(_prompt(rng, 4), 2)
+    err = eng.would_accept(4, 2)
+    assert isinstance(err, Saturated)
+    with pytest.raises(Saturated):
+        eng.submit(_prompt(rng, 4), 2)
+    done = eng.run()
+    assert sorted(done) == [a, b]
+    # drained: accepts again, nothing leaked by the rejected submits
+    assert eng.would_accept(4, 2) is None
+    _assert_pool_baseline(eng.cache)
+
+
+def test_would_accept_no_queueing_mode(setup, rng):
+    """max_waiting=0 means 'reject unless admissible immediately': an idle
+    engine accepts, one running request makes the next submit shed."""
+    model, params = setup
+    eng = ContinuousEngine(model, params, max_batch=1, page_size=4,
+                           num_pages=32, prefill_chunk=8, max_waiting=0)
+    assert eng.would_accept(6, 4) is None
+    rid = eng.submit(_prompt(rng), 4)
+    eng.step()                               # admitted into the batch
+    assert isinstance(eng.would_accept(6, 4), Saturated)
+    eng.run()
+    assert eng.would_accept(6, 4) is None
+
+
+def test_would_accept_page_demand_bound(setup, rng):
+    """Outstanding page demand beyond oversubscribe x pool saturates even
+    when the waiting-queue count bound alone would admit."""
+    model, params = setup
+    eng = ContinuousEngine(model, params, max_batch=2, page_size=2,
+                           num_pages=9, prefill_chunk=4, max_waiting=64)
+    eng.scheduler.oversubscribe = 1.0
+    eng.submit(_prompt(rng, 4), 4)           # 4 pages of demand
+    eng.submit(_prompt(rng, 4), 4)           # 8 of 8 usable
+    err = eng.would_accept(4, 4)
+    assert isinstance(err, Saturated) and "page pool" in str(err)
+    eng.run()
+    assert eng.would_accept(4, 4) is None

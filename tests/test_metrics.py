@@ -1,0 +1,257 @@
+"""Metrics registry: bucketing, monotonicity, Prometheus text rendering,
+and the TTFT/ITL timing rules — all with fake clocks, no engine."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.serve import Registry, ServeMetrics, ValidationError
+from repro.serve.lifecycle import (FINISH_LENGTH, FINISH_STOP,
+                                   CompletionParams, RequestLifecycle,
+                                   parse_completion_request)
+from repro.serve.metrics import LATENCY_BUCKETS
+
+
+# -- counters ----------------------------------------------------------------
+
+def test_counter_monotonic():
+    r = Registry()
+    c = r.counter("x_total", "help")
+    c.inc()
+    c.inc(2.5)
+    assert c.value() == 3.5
+    with pytest.raises(ValueError):
+        c.inc(-1)
+    c.set_to(10)
+    with pytest.raises(ValueError):        # a regression is a wiring bug
+        c.set_to(9)
+    assert c.value() == 10
+
+
+def test_counter_labels_independent():
+    r = Registry()
+    c = r.counter("req_total", "help", labelnames=("outcome",))
+    c.inc(outcome="stop")
+    c.inc(outcome="stop")
+    c.inc(outcome="length")
+    assert c.value(outcome="stop") == 2
+    assert c.value(outcome="length") == 1
+    with pytest.raises(ValueError):        # wrong label set
+        c.inc(reason="stop")
+    with pytest.raises(ValueError):        # missing labels entirely
+        c.inc()
+
+
+def test_gauge_set_inc_dec():
+    r = Registry()
+    g = r.gauge("depth", "help")
+    g.set(4)
+    g.inc()
+    g.dec(2)
+    assert g.value() == 3
+
+
+def test_registry_rejects_duplicates():
+    r = Registry()
+    r.counter("a_total", "h")
+    with pytest.raises(ValueError):
+        r.gauge("a_total", "h")
+
+
+# -- histograms --------------------------------------------------------------
+
+def test_histogram_bucketing_cumulative():
+    r = Registry()
+    h = r.histogram("lat", "help", buckets=(0.1, 1.0, 10.0))
+    for v in (0.05, 0.1, 0.5, 2.0, 99.0):  # 0.1 lands IN le="0.1" (<=)
+        h.observe(v)
+    assert h.count() == 5
+    assert h.sum() == pytest.approx(101.65)
+    text = r.render()
+    assert 'lat_bucket{le="0.1"} 2' in text
+    assert 'lat_bucket{le="1"} 3' in text
+    assert 'lat_bucket{le="10"} 4' in text
+    assert 'lat_bucket{le="+Inf"} 5' in text
+    assert "lat_count 5" in text
+
+
+def test_histogram_percentile():
+    r = Registry()
+    h = r.histogram("lat", "help", buckets=(1.0, 2.0, 4.0))
+    for v in (0.5, 1.5, 1.6, 3.0):
+        h.observe(v)
+    assert h.percentile(0.25) == 1.0       # bucket upper bounds
+    assert h.percentile(0.75) == 2.0
+    assert h.percentile(1.0) == 4.0
+    h.observe(100.0)
+    assert h.percentile(1.0) == math.inf
+    assert r.histogram("empty", "h").percentile(0.5) is None
+
+
+def test_default_buckets_cover_smoke_and_accelerator_range():
+    assert LATENCY_BUCKETS[0] <= 0.001 and LATENCY_BUCKETS[-1] >= 10.0
+    assert list(LATENCY_BUCKETS) == sorted(LATENCY_BUCKETS)
+
+
+# -- Prometheus text format (golden) -----------------------------------------
+
+def test_prometheus_golden_output():
+    r = Registry()
+    c = r.counter("msb_requests_total", "Completed requests by outcome",
+                  labelnames=("outcome",))
+    g = r.gauge("msb_queue_depth", "Requests waiting")
+    h = r.histogram("msb_ttft_seconds", "Time to first token",
+                    buckets=(0.5, 1.0))
+    c.inc(outcome="stop")
+    c.inc(3, outcome="length")
+    g.set(2)
+    h.observe(0.25)
+    h.observe(0.75)
+    h.observe(9.5)
+    assert r.render() == (
+        "# HELP msb_requests_total Completed requests by outcome\n"
+        "# TYPE msb_requests_total counter\n"
+        'msb_requests_total{outcome="length"} 3\n'
+        'msb_requests_total{outcome="stop"} 1\n'
+        "# HELP msb_queue_depth Requests waiting\n"
+        "# TYPE msb_queue_depth gauge\n"
+        "msb_queue_depth 2\n"
+        "# HELP msb_ttft_seconds Time to first token\n"
+        "# TYPE msb_ttft_seconds histogram\n"
+        'msb_ttft_seconds_bucket{le="0.5"} 1\n'
+        'msb_ttft_seconds_bucket{le="1"} 2\n'
+        'msb_ttft_seconds_bucket{le="+Inf"} 3\n'
+        "msb_ttft_seconds_sum 10.5\n"
+        "msb_ttft_seconds_count 3\n")
+
+
+def test_label_value_escaping():
+    r = Registry()
+    c = r.counter("x_total", "h", labelnames=("v",))
+    c.inc(v='a"b\\c\nd')
+    assert r.render().splitlines()[2] == 'x_total{v="a\\"b\\\\c\\nd"} 1'
+
+
+def test_serve_metrics_families_present():
+    text = ServeMetrics().render()
+    for family in ("msb_ttft_seconds", "msb_inter_token_seconds",
+                   "msb_queue_depth", "msb_running_requests",
+                   "msb_requests_total", "msb_tokens_generated_total",
+                   "msb_preemptions_total", "msb_aborts_total",
+                   "msb_prefix_hits_total", "msb_prefix_hit_rate"):
+        assert f"# TYPE {family} " in text
+
+
+# -- TTFT / ITL semantics ----------------------------------------------------
+
+def _params(stream=True, timeout_s=None):
+    return CompletionParams(prompt=np.array([1, 2, 3], np.int32),
+                            max_tokens=16, temperature=0.0, stop_ids=(),
+                            stream=stream, timeout_s=timeout_s)
+
+
+def test_ttft_measured_from_acceptance_to_first_token_event():
+    """Chunked prefill delays the first token-bearing event; TTFT is that
+    whole wait, observed exactly once."""
+    m = ServeMetrics()
+    lc = RequestLifecycle(_params(), metrics=m)
+    lc.on_accepted(now=100.0)
+    lc.on_tokens([], now=100.2)            # prefill ticks: no tokens yet
+    lc.on_tokens([], now=100.5)
+    assert m.ttft.count() == 0
+    lc.on_tokens([7], now=100.7)
+    assert m.ttft.count() == 1
+    assert m.ttft.sum() == pytest.approx(0.7)
+    lc.on_tokens([8], now=100.9)
+    assert m.ttft.count() == 1             # never re-observed
+
+
+def test_itl_one_observation_per_arrival_not_per_token():
+    """A decode_horizon=H dispatch delivers H tokens in ONE event; the only
+    latency a client saw is the single gap since the last flush — H-1
+    fabricated gaps would corrupt the histogram."""
+    m = ServeMetrics()
+    lc = RequestLifecycle(_params(), metrics=m)
+    lc.on_accepted(now=0.0)
+    lc.on_tokens([1], now=1.0)                      # TTFT only
+    lc.on_tokens([2, 3, 4, 5, 6, 7, 8, 9], now=1.5)  # H=8 burst: ONE gap
+    lc.on_tokens([10], now=2.5)
+    assert m.itl.count() == 2              # not 9
+    assert m.itl.sum() == pytest.approx(0.5 + 1.0)
+    assert lc.n_tokens == 10
+    assert lc.token_ids == list(range(1, 11))
+
+
+def test_finish_counts_outcome_once():
+    m = ServeMetrics()
+    lc = RequestLifecycle(_params(), metrics=m)
+    lc.on_accepted(0.0)
+    lc.on_tokens([1], 1.0)
+    lc.on_finish(FINISH_LENGTH, 2.0)
+    lc.on_finish(FINISH_STOP, 3.0)         # idempotent: first reason wins
+    assert lc.finish_reason == FINISH_LENGTH
+    assert m.requests.value(outcome="length") == 1
+    assert m.requests.value(outcome="stop") == 0
+    with pytest.raises(ValueError):
+        RequestLifecycle(_params()).on_finish("exploded", 0.0)
+
+
+def test_deadline_from_timeout_param():
+    lc = RequestLifecycle(_params(timeout_s=2.0))
+    lc.on_accepted(10.0)
+    assert not lc.timed_out(11.9)
+    assert lc.timed_out(12.0)
+    lc2 = RequestLifecycle(_params(timeout_s=None))
+    lc2.on_accepted(10.0)
+    assert not lc2.timed_out(1e12)
+
+
+def test_request_ids_unique_and_prefixed():
+    a = RequestLifecycle(_params())
+    b = RequestLifecycle(_params())
+    assert a.request_id != b.request_id
+    assert a.request_id.startswith("cmpl-")
+
+
+# -- request validation ------------------------------------------------------
+
+def test_parse_valid_body_and_string_prompt():
+    p = parse_completion_request(
+        {"prompt": [1, 2, 3], "max_tokens": 4, "stop": 9, "stream": True,
+         "timeout": 2.5},
+        vocab_size=64)
+    assert p.prompt.dtype == np.int32 and p.prompt.tolist() == [1, 2, 3]
+    assert p.max_tokens == 4 and p.stop_ids == (9,) and p.eos_id == 9
+    assert p.stream and p.timeout_s == 2.5
+    q = parse_completion_request({"prompt": "5 6 7"}, vocab_size=64)
+    assert q.prompt.tolist() == [5, 6, 7] and not q.stream
+    assert q.eos_id is None
+
+
+@pytest.mark.parametrize("body,param", [
+    ({}, "prompt"),
+    ({"prompt": []}, "prompt"),
+    ({"prompt": "not ids"}, "prompt"),
+    ({"prompt": [1.5]}, "prompt"),
+    ({"prompt": [64]}, "prompt"),              # out of vocab (vocab_size=64)
+    ({"prompt": [1], "max_tokens": 0}, "max_tokens"),
+    ({"prompt": [1], "max_tokens": 10**9}, "max_tokens"),
+    ({"prompt": [1], "temperature": 0.7}, "temperature"),
+    ({"prompt": [1], "stop": [1, 2, 3, 4, 5]}, "stop"),
+    ({"prompt": [1], "stream": "yes"}, "stream"),
+    ({"prompt": [1], "timeout": -1}, "timeout"),
+    ({"prompt": [1], "n": 2}, "n"),
+])
+def test_parse_rejections_name_the_param(body, param):
+    with pytest.raises(ValidationError) as ei:
+        parse_completion_request(body, vocab_size=64)
+    assert ei.value.param == param
+
+
+def test_server_timeout_cap_applies():
+    p = parse_completion_request({"prompt": [1], "timeout": 500},
+                                 vocab_size=64, max_timeout_s=30.0)
+    assert p.timeout_s == 30.0
+    q = parse_completion_request({"prompt": [1]}, vocab_size=64,
+                                 max_timeout_s=30.0)
+    assert q.timeout_s == 30.0             # cap is also the default deadline
