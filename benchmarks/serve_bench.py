@@ -53,6 +53,12 @@ per request) vs direct engine use, asserting token identity and that the
 API layer costs < 15% of direct tokens/sec, and reporting client-side TTFT
 percentiles (DESIGN.md Sec. 13).
 
+An eighth axis (``fault_recovery``) serves the same burst fault-free vs
+through ``EngineSupervisor`` with a seeded ``FaultPlan`` crashing the
+engine mid-flight (DESIGN.md Sec. 14), asserting token identity and a
+clean page-pool audit (zero leaks) and reporting recovery latency,
+replayed-token overhead, and the end-to-end wall slowdown the faults cost.
+
 Emits a JSON comparison to stdout and --out (default
 artifacts/serve_bench.json); see benchmarks/README.md for the schema.
 """
@@ -512,6 +518,75 @@ def _run_api_overhead_axis(model, qparams, fast):
     }
 
 
+def _run_fault_recovery_axis(model, qparams, fast):
+    """Fault-recovery axis: the same burst served fault-free vs through
+    ``EngineSupervisor`` with a seeded ``FaultPlan`` crashing the engine
+    mid-flight (DESIGN.md Sec. 14). Asserts the supervised run's greedy
+    outputs are token-identical to the fault-free run and that the page
+    pool audits clean afterwards (zero leaks); reports recovery latency
+    (seconds per engine rebuild), replayed-token overhead (tokens
+    re-decoded to restore in-flight state / useful tokens) and the wall
+    slowdown the faults cost end to end."""
+    from repro.serve import ContinuousEngine, EngineSupervisor, FaultPlan
+
+    rng = np.random.default_rng(23)
+    n_req = 6 if fast else 10
+    budget = 24
+    reqs = [(rng.integers(0, 64, (int(rng.integers(4, 12)),))
+             .astype(np.int32), budget) for _ in range(n_req)]
+    eng_kw = dict(max_batch=8, page_size=4, num_pages=96, max_seq=36,
+                  prefill_chunk=8)
+
+    def clean_round():
+        eng = ContinuousEngine(model, qparams, **eng_kw)
+        t0 = time.perf_counter()
+        rids = [eng.submit(*r) for r in reqs]
+        outs = eng.run()
+        dt = time.perf_counter() - t0
+        return dt, [outs[r].tolist() for r in rids], eng.n_tokens_out
+
+    clean_round()                                  # warm jit buckets
+    c_dt, refs, c_tokens = min((clean_round() for _ in range(3)),
+                               key=lambda r: r[0])
+
+    n_faults = 6 if fast else 12
+    plan = FaultPlan.seeded(7, n_faults=n_faults,
+                            sites=("step", "apply", "alloc"),
+                            first=2, spread=30, stall_s=0.01)
+    sup = EngineSupervisor(
+        lambda: ContinuousEngine(model, qparams, faults=plan, **eng_kw),
+        watchdog=False, max_crashes_per_request=100)
+    t0 = time.perf_counter()
+    rids = [sup.submit(*r) for r in reqs]
+    outs = sup.run()
+    f_dt = time.perf_counter() - t0
+    ident = [outs[r].tolist() for r in rids] == refs
+    assert ident, "supervised recovery changed greedy tokens"
+    assert plan.exhausted, (
+        f"plan only fired {len(plan.fired)}/{plan.n_events}")
+    sup.engine.cache.check_invariants(expect_idle=True)   # zero leaks
+    st = sup.stats()
+    sup.close()
+    rec = sorted(1e3 * t for t in st["recovery_log"]) or [0.0]
+    return {
+        "n_requests": n_req, "budget": budget, "n_faults": n_faults,
+        "faults_fired": len(plan.fired),
+        "restarts": st["restarts"],
+        "replayed_tokens": st["replayed_tokens"],
+        "replay_overhead_frac": round(st["replayed_tokens"]
+                                      / max(1, c_tokens), 4),
+        "clean": {"seconds": round(c_dt, 3), "tokens": c_tokens,
+                  "tokens_per_s": round(c_tokens / c_dt, 1)},
+        "faulted": {"seconds": round(f_dt, 3),
+                    "tokens_per_s": round(c_tokens / f_dt, 1)},
+        "wall_slowdown": round(f_dt / c_dt, 3),
+        "recovery_ms": {"p50": round(float(np.percentile(rec, 50)), 2),
+                        "max": round(rec[-1], 2), "n": len(rec)},
+        "outputs_identical": bool(ident),
+        "pool_audit_clean": True,
+    }
+
+
 def _run_continuous(model, params, reqs, arrivals, warm=True):
     from repro.serve import ContinuousEngine
 
@@ -625,6 +700,17 @@ def main():
           f"{ao['overhead_frac']:+.1%} | ttft p50 {ao['ttft_ms']['p50']}ms "
           f"p90 {ao['ttft_ms']['p90']}ms max {ao['ttft_ms']['max']}ms | "
           f"identical {ao['outputs_identical']}")
+
+    report["fault_recovery"] = _run_fault_recovery_axis(
+        model, qparams, args.fast)
+    fr = report["fault_recovery"]
+    print(f"[serve_bench] fault_recovery axis: {fr['faults_fired']} faults "
+          f"-> {fr['restarts']} restarts | recovery p50 "
+          f"{fr['recovery_ms']['p50']}ms max {fr['recovery_ms']['max']}ms | "
+          f"replayed {fr['replayed_tokens']} tokens "
+          f"({fr['replay_overhead_frac']:.1%}) | wall x{fr['wall_slowdown']} "
+          f"| identical {fr['outputs_identical']} | pool clean "
+          f"{fr['pool_audit_clean']}")
 
     os.makedirs(os.path.dirname(args.out), exist_ok=True)
     with open(args.out, "w") as f:

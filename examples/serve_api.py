@@ -20,6 +20,17 @@ run of the same prompt — the front door must not change greedy tokens), a
 mid-stream disconnect (asserting the engine aborts the request and the
 page pool drains back to baseline), then scrapes ``/metrics`` to
 ``--metrics-out``.
+
+``--self-check --chaos`` instead wraps the engine in ``EngineSupervisor``
+with a seeded ``FaultPlan`` (DESIGN.md Sec. 14) and drives concurrent
+streaming clients through the injected crashes: clients retry on 503
+(recovery window) / 429, every final stream must be byte-identical to a
+fault-free reference run, and the page pool must audit clean afterwards
+(``check_invariants(expect_idle=True)`` — zero leaked pages).
+
+In foreground mode (no ``--self-check``) SIGTERM/SIGINT triggers a
+graceful drain: admissions answer 503 while in-flight requests run to
+completion, then the server exits.
 """
 import argparse
 import dataclasses
@@ -156,6 +167,101 @@ def self_check(srv, host, port, metrics_out):
     print("[self-check] all assertions passed")
 
 
+def chaos_check(srv, sup, plan, host, port, prompts, refs, metrics_out):
+    """Concurrent clients vs. the seeded fault plan: byte-identical
+    streams, no hangs, zero leaked pages."""
+    from concurrent.futures import ThreadPoolExecutor
+
+    def client(i):
+        payload = json.dumps({"prompt": prompts[i], "max_tokens": 16,
+                              "stream": True}).encode()
+        deadline = time.monotonic() + 180
+        while True:
+            assert time.monotonic() < deadline, f"chaos client {i} hung"
+            conn = http.client.HTTPConnection(host, port, timeout=120)
+            conn.request("POST", "/v1/completions", payload,
+                         {"Content-Type": "application/json"})
+            resp = conn.getresponse()
+            body = resp.read()
+            conn.close()
+            if resp.status in (429, 503):      # saturated / recovering
+                time.sleep(0.05)
+                continue
+            assert resp.status == 200, (resp.status, body)
+            frames = [f for f in body.decode().split("\n\n") if f]
+            assert all(f.startswith("data: ") for f in frames), "bad framing"
+            assert frames[-1] == "data: [DONE]", "stream ended without [DONE]"
+            chunks = [json.loads(f[6:])["choices"][0] for f in frames[:-1]]
+            return [t for c in chunks for t in c["token_ids"]]
+
+    with ThreadPoolExecutor(len(prompts)) as pool:
+        streams = list(pool.map(client, range(len(prompts))))
+    for i, toks in enumerate(streams):
+        assert toks == refs[i], (
+            f"chaos client {i} diverged from the fault-free run")
+    assert plan.exhausted, f"plan only fired {len(plan.fired)}/{plan.n_events}"
+    assert sup.n_restarts > 0, "no fault actually crashed the engine"
+    deadline = time.monotonic() + 15
+    cache = sup.engine.cache
+    while time.monotonic() < deadline and (
+            cache.n_free_pages + cache.n_cached_pages < cache.num_pages - 1):
+        time.sleep(0.05)
+    cache.check_invariants(expect_idle=True)   # zero leaked pages
+    st = sup.stats()
+    print(f"[chaos] {len(prompts)} clients byte-identical through "
+          f"{len(plan.fired)} injected faults ({st['restarts']} restarts, "
+          f"{st['replayed_tokens']} tokens replayed, "
+          f"{st['watchdog_trips']} watchdog trips); pool audit clean")
+    if metrics_out:
+        conn = http.client.HTTPConnection(host, port, timeout=30)
+        conn.request("GET", "/metrics")
+        scrape = conn.getresponse().read().decode()
+        conn.close()
+        assert "msb_engine_restarts_total" in scrape
+        with open(metrics_out, "w") as f:
+            f.write(scrape)
+        print(f"[chaos] /metrics scrape -> {metrics_out} "
+              f"({len(scrape.splitlines())} lines)")
+    print("[chaos] all assertions passed")
+
+
+def run_chaos(args):
+    from repro.serve import (APIServer, ContinuousEngine, EngineSupervisor,
+                             FaultPlan)
+
+    ref_eng = build_engine()
+    rng = np.random.default_rng(11)
+    prompts = [rng.integers(0, 64, (int(n),)).astype(np.int32).tolist()
+               for n in rng.integers(4, 12, (6,))]
+    rids = [ref_eng.submit(np.asarray(p, np.int32), 16) for p in prompts]
+    out = ref_eng.run()
+    refs = [out[r].tolist() for r in rids]
+    model, params = ref_eng.model, ref_eng.params
+    ref_eng.close()
+    print(f"[chaos] fault-free reference computed for {len(prompts)} prompts")
+
+    # spread is small on purpose: decode_horizon=8 fuses 8 tokens per
+    # engine step, so per-site indices advance slowly — a wide spread
+    # would leave tail faults unfired by this short workload
+    plan = FaultPlan.seeded(args.chaos_seed, n_faults=8,
+                            sites=("step", "apply", "alloc"),
+                            first=2, spread=10, stall_s=0.02)
+    kw = dict(max_batch=8, page_size=4, num_pages=256, max_seq=128,
+              prefill_chunk=8, decode_horizon=8, max_waiting=32)
+    sup = EngineSupervisor(
+        lambda: ContinuousEngine(model, params, faults=plan, **kw),
+        watchdog=False, max_crashes_per_request=100)
+    srv = APIServer(sup, host=args.host, port=0, max_timeout_s=300.0)
+    host, port = srv.serve_background()
+    print(f"[chaos] seeded plan {plan} against http://{host}:{port}")
+    try:
+        chaos_check(srv, sup, plan, host, port, prompts, refs,
+                    args.metrics_out)
+    finally:
+        srv.close()
+        sup.close(check=False)
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
     ap.add_argument("--host", default="127.0.0.1")
@@ -164,9 +270,20 @@ def main():
                     help="start in-process, exercise the API, then exit")
     ap.add_argument("--metrics-out", default=None,
                     help="with --self-check: write the /metrics scrape here")
+    ap.add_argument("--chaos", action="store_true",
+                    help="with --self-check: run the fault-injection chaos "
+                         "check (supervised engine + seeded FaultPlan)")
+    ap.add_argument("--chaos-seed", type=int, default=42,
+                    help="seed for the --chaos fault plan")
     args = ap.parse_args()
 
     from repro.serve import APIServer
+
+    if args.chaos:
+        if not args.self_check:
+            ap.error("--chaos requires --self-check")
+        run_chaos(args)
+        return
 
     engine = build_engine()
     srv = APIServer(engine, host=args.host,

@@ -1,5 +1,7 @@
 from .continuous import ContinuousEngine
 from .engine import ServeEngine
+from .faults import NO_FAULTS, FaultEvent, FaultPlan, InjectedFault, \
+    InjectedOOM
 from .lifecycle import (CompletionParams, RequestLifecycle, ValidationError,
                         parse_completion_request)
 from .metrics import Counter, Gauge, Histogram, Registry, ServeMetrics
@@ -7,10 +9,14 @@ from .paged_cache import (OutOfPages, PagedKVCache, PageStateError,
                           PrefixMatch)
 from .scheduler import Request, Saturated, Scheduler, Sequence
 from .server import APIServer, EngineLoop
+from .supervisor import (Draining, EngineDied, EngineSupervisor,
+                         PoisonedRequest, Recovering, WatchdogTimeout)
 
 __all__ = ["APIServer", "CompletionParams", "ContinuousEngine", "Counter",
-           "EngineLoop", "Gauge", "Histogram", "OutOfPages", "PagedKVCache",
-           "PageStateError", "PrefixMatch", "Registry", "Request",
-           "RequestLifecycle", "Saturated", "Scheduler", "Sequence",
-           "ServeEngine", "ServeMetrics", "ValidationError",
-           "parse_completion_request"]
+           "Draining", "EngineDied", "EngineLoop", "EngineSupervisor",
+           "FaultEvent", "FaultPlan", "Gauge", "Histogram", "InjectedFault",
+           "InjectedOOM", "NO_FAULTS", "OutOfPages", "PagedKVCache",
+           "PageStateError", "PoisonedRequest", "PrefixMatch", "Recovering",
+           "Registry", "Request", "RequestLifecycle", "Saturated",
+           "Scheduler", "Sequence", "ServeEngine", "ServeMetrics",
+           "ValidationError", "WatchdogTimeout", "parse_completion_request"]

@@ -100,6 +100,7 @@ class ContinuousEngine:
     prefix_cache: bool = True         # automatic cross-request prefix reuse
     decode_horizon: int = 1           # fused decode steps per dispatch
     max_waiting: Optional[int] = None  # backpressure: bound on waiting queue
+    faults: object = None             # FaultPlan (testing); None = NO_FAULTS
 
     def __post_init__(self):
         from .engine import resolve_execution
@@ -117,13 +118,16 @@ class ContinuousEngine:
         if self.decode_horizon < 1:
             raise ValueError(f"decode_horizon must be >= 1, "
                              f"got {self.decode_horizon}")
+        if self.faults is None:
+            from .faults import NO_FAULTS
+            self.faults = NO_FAULTS
         mpps = self.max_pages_per_seq
         if mpps is None and self.max_seq is not None:
             mpps = -(-self.max_seq // self.page_size)
         self.cache = PagedKVCache(
             self.model, num_pages=self.num_pages, page_size=self.page_size,
             max_seqs=self.max_batch, max_pages_per_seq=mpps,
-            prefix_cache=self.prefix_cache)
+            prefix_cache=self.prefix_cache, faults=self.faults)
         self.scheduler = Scheduler(self.cache, self.max_batch,
                                    self.prefill_chunk,
                                    decode_horizon=self.decode_horizon,
@@ -154,6 +158,11 @@ class ContinuousEngine:
         self.n_tokens_out = 0
         self.n_work_positions = 0     # device token-positions incl. padding
         self.n_forks = 0              # fork_request children that shared pages
+        # crash blame: request ids in the work unit the current (or most
+        # recently crashed) step dispatched — a prefill names one sequence,
+        # a decode names the batch; () before any work is scheduled. The
+        # supervisor reads this to attribute a crash (DESIGN.md Sec. 14).
+        self.last_step_rids: Tuple[int, ...] = ()
 
     def _init_tensor_parallel(self):
         """Shard params + page pools over ``mesh`` and build the shard_map
@@ -253,9 +262,18 @@ class ContinuousEngine:
         host at ``decode_horizon=1`` and on device inside the fused scan
         otherwise; both are the same f32 argmax, so outputs are
         reproducible across ``execution`` modes, TP meshes and horizons."""
+        # blame is reset *before* the step fault-site fires so a crash here
+        # (pre-schedule) attributes to no specific request
+        self.last_step_rids = ()
+        if self.faults.armed:
+            self.faults.fire("step")
         work = self.scheduler.schedule()
         if work is None:
             return False
+        if work[0] == "prefill":
+            self.last_step_rids = (work[1].req.req_id,)
+        else:
+            self.last_step_rids = tuple(s.req.req_id for s in work[1])
         self.n_steps += 1
         if work[0] == "prefill":
             self._run_prefill(*work[1:])
@@ -378,6 +396,46 @@ class ContinuousEngine:
 
     # -- metrics -------------------------------------------------------------
     @property
+    def has_work(self) -> bool:
+        """True while any submitted request is unfinished. The generic
+        driving predicate for engine owners (``EngineLoop``, benches) —
+        the ``EngineSupervisor`` mirrors it, so loops written against
+        ``has_work`` drive a raw engine and a supervised one alike."""
+        return self.scheduler.has_work
+
+    def stats(self) -> Dict[str, object]:
+        """Counter snapshot for metrics exporters. Monotonic counts plus
+        the two instantaneous gauges (``queue_depth``, ``running``). The
+        ``EngineSupervisor`` exposes the same schema aggregated across
+        engine rebuilds — ``ServeMetrics.sync_engine`` consumes either."""
+        s = self.scheduler
+        return {
+            "tokens_out": self.n_tokens_out,
+            "steps": self.n_steps,
+            "decode_steps": self.n_decode_steps,
+            "host_syncs": self.n_host_syncs,
+            "work_positions": self.n_work_positions,
+            "aborts": self.n_aborts,
+            "preemptions": s.n_preemptions,
+            "admissions": s.n_admissions,
+            "prefix_hits": s.n_prefix_hits,
+            "prefix_positions_saved": s.n_prefix_tokens,
+            "forks": self.n_forks,
+            "queue_depth": len(s.waiting),
+            "running": len(s.running),
+        }
+
+    def close(self, check: bool = True):
+        """Tear down the engine. With ``check=True`` (default) the page
+        allocator's full invariant suite runs first — refcounts, free
+        list, lease extents, registry/LRU consistency — and, when no
+        request is live, the pool must be back at its post-init baseline:
+        zero leaked pages (``PageStateError`` otherwise)."""
+        if check:
+            self.cache.check_invariants(
+                expect_idle=not self.scheduler.has_work)
+
+    @property
     def n_prefix_hits(self):
         """Admissions that longest-prefix-matched the page registry."""
         return self.scheduler.n_prefix_hits
@@ -408,6 +466,8 @@ class ContinuousEngine:
         q_pos[0, :n] = start + np.arange(n)
         kv_lens = np.asarray([start + n], np.int32)
         logits = self._dispatch([seq.slot], tokens, q_pos, kv_lens)
+        if self.faults.armed:
+            self.faults.fire("apply")   # device written, host not yet
         seq.cache_len = start + n
         self.cache.commit(seq.slot, seq.cache_len)
         self.cache.register_prefix(seq.slot, seq.tokens[:seq.cache_len])
@@ -444,6 +504,8 @@ class ContinuousEngine:
             q_pos[i, 0] = seq.n_total - 1
             kv_lens[i] = seq.n_total
         logits = self._dispatch(slots, tokens, q_pos, kv_lens)
+        if self.faults.armed:
+            self.faults.fire("apply")   # device written, host not yet
         for i, seq in enumerate(seqs):
             seq.cache_len = seq.n_total
             self.cache.commit(seq.slot, seq.cache_len)
@@ -481,6 +543,8 @@ class ContinuousEngine:
             bt)
         out_tok, valid = np.asarray(out_tok), np.asarray(valid)
         self.n_host_syncs += 1
+        if self.faults.armed:
+            self.faults.fire("apply")   # device written, host not yet
         for i, seq in enumerate(seqs):
             k = int(valid[i].sum())     # valid is a prefix mask per row
             for t in out_tok[i, :k]:

@@ -41,8 +41,9 @@ FINISH_STOP = "stop"            # hit an eos/stop token (token included)
 FINISH_LENGTH = "length"        # exhausted max_tokens
 FINISH_CANCELLED = "cancelled"  # client disconnect / explicit abort
 FINISH_TIMEOUT = "timeout"      # server-side deadline exceeded
+FINISH_ERROR = "error"          # engine-side failure (quarantine, death)
 FINISH_REASONS = (FINISH_STOP, FINISH_LENGTH, FINISH_CANCELLED,
-                  FINISH_TIMEOUT)
+                  FINISH_TIMEOUT, FINISH_ERROR)
 
 
 class ValidationError(ValueError):

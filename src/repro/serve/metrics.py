@@ -287,23 +287,69 @@ class ServeMetrics:
         self.prefix_hit_rate = r.gauge(
             "msb_prefix_hit_rate",
             "Fraction of admissions that hit the prefix cache")
+        # supervision (DESIGN.md Sec. 14) — zero-valued until a supervised
+        # engine syncs, so dashboards can alert on them unconditionally
+        self.restarts = r.counter(
+            "msb_engine_restarts_total",
+            "Engine incarnations discarded and rebuilt after crash or hang")
+        self.watchdog_trips = r.counter(
+            "msb_watchdog_trips_total",
+            "Steps abandoned for exceeding the watchdog deadline")
+        self.replayed_tokens = r.counter(
+            "msb_replayed_tokens_total",
+            "Already-generated tokens re-admitted as prompt after recovery")
+        self.quarantined = r.counter(
+            "msb_quarantined_requests_total",
+            "Requests failed for exhausting their crash-blame budget")
+        self.detok_restarts = r.counter(
+            "msb_detok_restarts_total",
+            "Detokenize-thread deaths detected and restarted")
+        self.recovery = r.histogram(
+            "msb_recovery_seconds",
+            "Wall time of one crash recovery (blame + rebuild), excluding "
+            "replay re-prefill")
+        self.health = r.gauge(
+            "msb_health_state",
+            "One-hot server health (exactly one state is 1)",
+            labelnames=("state",))
+        for s in ("ok", "degraded", "draining", "dead"):
+            self.health.set(1.0 if s == "ok" else 0.0, state=s)
+        self._recovery_seen = 0       # recovery_log entries already observed
 
     def sync_engine(self, engine):
-        """Ratchet engine/scheduler counters and refresh gauges. Engine
-        counters are monotonic by construction; ``set_to`` enforces it."""
-        sched = engine.scheduler
-        self.queue_depth.set(len(sched.waiting))
-        self.running.set(len(sched.running))
-        self.tokens.set_to(engine.n_tokens_out)
-        self.dispatches.set_to(engine.n_steps)
-        self.decode_dispatches.set_to(engine.n_decode_steps)
-        self.host_syncs.set_to(engine.n_host_syncs)
-        self.preemptions.set_to(sched.n_preemptions)
-        self.aborts.set_to(engine.n_aborts)
-        self.prefix_hits.set_to(engine.n_prefix_hits)
-        self.prefix_positions_saved.set_to(engine.n_prefix_positions_saved)
+        """Ratchet engine counters and refresh gauges from the engine's
+        ``stats()`` snapshot. Works identically for a raw
+        ``ContinuousEngine`` and an ``EngineSupervisor`` — the supervisor
+        aggregates counters across engine rebuilds (a fresh incarnation's
+        counters restart at zero; feeding them here raw would trip the
+        ``set_to`` monotonicity check) and adds the supervision families.
+        Counters are monotonic by construction; ``set_to`` enforces it."""
+        st = engine.stats()
+        self.queue_depth.set(st["queue_depth"])
+        self.running.set(st["running"])
+        self.tokens.set_to(st["tokens_out"])
+        self.dispatches.set_to(st["steps"])
+        self.decode_dispatches.set_to(st["decode_steps"])
+        self.host_syncs.set_to(st["host_syncs"])
+        self.preemptions.set_to(st["preemptions"])
+        self.aborts.set_to(st["aborts"])
+        self.prefix_hits.set_to(st["prefix_hits"])
+        self.prefix_positions_saved.set_to(st["prefix_positions_saved"])
         self.prefix_hit_rate.set(
-            engine.n_prefix_hits / max(sched.n_admissions, 1))
+            st["prefix_hits"] / max(st["admissions"], 1))
+        if "restarts" in st:          # supervised engine
+            self.restarts.set_to(st["restarts"])
+            self.watchdog_trips.set_to(st["watchdog_trips"])
+            self.replayed_tokens.set_to(st["replayed_tokens"])
+            self.quarantined.set_to(st["quarantined"])
+            for t in st["recovery_log"][self._recovery_seen:]:
+                self.recovery.observe(t)
+            self._recovery_seen = len(st["recovery_log"])
+            self.set_health(st["health"])
+
+    def set_health(self, state: str):
+        for s in ("ok", "degraded", "draining", "dead"):
+            self.health.set(1.0 if s == state else 0.0, state=s)
 
     def render(self) -> str:
         return self.registry.render()

@@ -93,9 +93,13 @@ class PagedKVCache:
     """
 
     def __init__(self, model, *, num_pages, page_size, max_seqs,
-                 max_pages_per_seq=None, prefix_cache=False):
+                 max_pages_per_seq=None, prefix_cache=False, faults=None):
         if num_pages < 2:
             raise ValueError("need >= 2 pages (page 0 is reserved scratch)")
+        if faults is None:
+            from .faults import NO_FAULTS
+            faults = NO_FAULTS
+        self.faults = faults
         self.page_size = int(page_size)
         self.num_pages = int(num_pages)
         self.max_seqs = int(max_seqs)
@@ -250,6 +254,10 @@ class PagedKVCache:
         need = self.pages_for(n_tokens) - len(self.seq_pages[slot])
         if need <= 0:
             return
+        if self.faults.armed:
+            # fires before any allocation, so the all-or-nothing contract
+            # holds for injected OOM exactly as for real exhaustion
+            self.faults.fire("alloc")
         if self.pages_for(n_tokens) > self.max_pages_per_seq:
             raise OutOfPages(f"slot {slot}: {n_tokens} tokens exceed "
                              f"max_pages_per_seq={self.max_pages_per_seq}")
@@ -413,3 +421,116 @@ class PagedKVCache:
             self._rows_cache.clear()
         self._rows_cache[key] = (vers, dev)
         return dev
+
+    # -- invariants ----------------------------------------------------------
+    def check_invariants(self, expect_idle: bool = False):
+        """Full-state allocator audit; raises ``PageStateError`` naming the
+        first violated invariant, returns None when consistent.
+
+        Checks: the refcount of every page equals its occurrence count
+        across live block tables (scratch page 0 pinned at 1, LRU-parked
+        pages at 0); the free list is duplicate-free and disjoint from
+        every live table, the LRU and the registry; every usable page is
+        in exactly one of {free, LRU-cached, referenced} — conservation,
+        i.e. zero leaked pages; block-table rows mirror ``seq_pages``;
+        committed lengths fit inside reserved leases; the registry and its
+        page->digest inverse are a bijection and the LRU is a subset of the
+        registered refcount-0 pages; free slots are duplicate-free with
+        fully cleared state.
+
+        ``expect_idle=True`` additionally requires no live sequence at all
+        — every slot free and every usable page free or LRU-reclaimable,
+        the post-drain / teardown baseline the chaos tests assert.
+
+        This is the ground truth the supervisor's recovery story leans on:
+        an engine incarnation that crashed mid-mutation is *discarded*,
+        never repaired, precisely because this audit can only certify a
+        pool that finished its bookkeeping."""
+        def fail(msg):
+            raise PageStateError(f"check_invariants: {msg}")
+
+        live = [s for s in range(self.max_seqs) if s not in self._free_slots]
+        if len(set(self._free_slots)) != len(self._free_slots):
+            fail(f"duplicate slots on the free-slot list: {self._free_slots}")
+        for s in self._free_slots:
+            if self.seq_pages[s] or self.seq_lens[s] or self._slot_digests[s]:
+                fail(f"free slot {s} still holds state: "
+                     f"pages={self.seq_pages[s]}, "
+                     f"len={int(self.seq_lens[s])}")
+        # refcount reconstruction from live block tables (+ scratch pin)
+        expected = np.zeros((self.num_pages,), np.int64)
+        expected[0] = 1
+        for s in live:
+            pages = self.seq_pages[s]
+            for i, p in enumerate(pages):
+                if not 1 <= p < self.num_pages:
+                    fail(f"slot {s} holds invalid page id {p}")
+                expected[p] += 1
+                if self.block_tables[s, i] != p:
+                    fail(f"block_tables[{s}, {i}] = "
+                         f"{int(self.block_tables[s, i])} but seq_pages "
+                         f"says page {p}")
+            if np.any(self.block_tables[s, len(pages):] != 0):
+                fail(f"slot {s}: block-table tail past its {len(pages)} "
+                     "pages is not zeroed")
+            if self.seq_lens[s] > len(pages) * self.page_size:
+                fail(f"slot {s}: committed length {int(self.seq_lens[s])} "
+                     f"exceeds its lease of {len(pages)} pages "
+                     f"({len(pages) * self.page_size} tokens)")
+            if len(self._slot_digests[s]) > len(pages):
+                fail(f"slot {s}: {len(self._slot_digests[s])} chain digests "
+                     f"for {len(pages)} pages")
+        mism = [p for p in range(self.num_pages)
+                if int(self.ref_counts[p]) != int(expected[p])]
+        if mism:
+            p = mism[0]
+            fail(f"page {p}: refcount {int(self.ref_counts[p])} but "
+                 f"{int(expected[p])} live references reconstruct "
+                 f"({len(mism)} pages disagree)")
+        # free list: unique, refcount 0, unregistered, not scratch
+        free = set(self._free)
+        if len(free) != len(self._free):
+            fail("duplicate pages on the free list")
+        if 0 in free:
+            fail("scratch page 0 is on the free list")
+        for p in self._free:
+            if self.ref_counts[p] != 0:
+                fail(f"free page {p} has refcount {int(self.ref_counts[p])}")
+            if p in self._page_digest:
+                fail(f"free page {p} is still registered in the prefix "
+                     "registry")
+        # registry <-> page digest bijection; LRU subset of registered@0
+        if len(self._registry) != len(self._page_digest):
+            fail(f"registry has {len(self._registry)} digests but "
+                 f"{len(self._page_digest)} pages carry one")
+        for digest, p in self._registry.items():
+            if self._page_digest.get(p) != digest:
+                fail(f"registry maps digest->page {p} but page maps back "
+                     f"to a different digest")
+        for p in self._lru:
+            if p not in self._page_digest:
+                fail(f"LRU page {p} is not registered")
+            if self.ref_counts[p] != 0:
+                fail(f"LRU page {p} has refcount {int(self.ref_counts[p])}")
+            if p in free:
+                fail(f"page {p} is on both the LRU and the free list")
+        # conservation: every usable page in exactly one of the three states
+        referenced = {p for p in range(1, self.num_pages)
+                      if self.ref_counts[p] > 0}
+        lru = set(self._lru)
+        if free & referenced:
+            fail(f"pages both free and referenced: {sorted(free & referenced)}")
+        n_accounted = len(free) + len(lru) + len(referenced)
+        if n_accounted != self.num_pages - 1:
+            missing = (set(range(1, self.num_pages))
+                       - free - lru - referenced)
+            fail(f"page conservation violated: {len(free)} free + "
+                 f"{len(lru)} cached + {len(referenced)} referenced = "
+                 f"{n_accounted}, expected {self.num_pages - 1} "
+                 f"(leaked: {sorted(missing)})")
+        if expect_idle:
+            if live:
+                fail(f"expected idle pool but slots {live} are live")
+            if referenced:
+                fail(f"expected idle pool but pages {sorted(referenced)} "
+                     "are still referenced (leak)")

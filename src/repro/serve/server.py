@@ -51,11 +51,14 @@ import threading
 import time
 from typing import Callable, Dict, Optional
 
-from .lifecycle import (DONE, FINISH_CANCELLED, FINISH_LENGTH, FINISH_STOP,
-                        FINISH_TIMEOUT, RequestLifecycle, ValidationError,
-                        parse_completion_request)
+from .faults import NO_FAULTS
+from .lifecycle import (DONE, FINISH_CANCELLED, FINISH_ERROR, FINISH_LENGTH,
+                        FINISH_STOP, FINISH_TIMEOUT, RequestLifecycle,
+                        ValidationError, parse_completion_request)
 from .metrics import Registry, ServeMetrics
 from .scheduler import Saturated
+from .supervisor import DEAD, DEGRADED, DRAINING, OK, Draining, EngineDied, \
+    Recovering
 
 
 def default_detokenize(token_id: int) -> str:
@@ -94,11 +97,19 @@ class EngineLoop:
 
     def __init__(self, engine, metrics: Optional[ServeMetrics] = None,
                  detokenize: Optional[Callable[[int], str]] = None,
-                 idle_poll_s: float = 0.05):
+                 idle_poll_s: float = 0.05, faults=NO_FAULTS,
+                 max_detok_restarts: int = 3):
         self.engine = engine
         self.metrics = metrics or ServeMetrics()
         self.detokenize = detokenize or default_detokenize
         self.idle_poll_s = idle_poll_s
+        self.faults = faults
+        self.max_detok_restarts = int(max_detok_restarts)
+        self.n_detok_restarts = 0
+        self.detok_dead = False        # restart budget exhausted
+        self.detok_err: Optional[BaseException] = None
+        self.died: Optional[BaseException] = None   # _run escaped with this
+        self.draining = False
         self._cmds: "queue.Queue" = queue.Queue()
         self._detok_q: "queue.Queue" = queue.Queue()
         self._by_rid: Dict[int, RequestLifecycle] = {}
@@ -123,12 +134,45 @@ class EngineLoop:
 
     @property
     def alive(self) -> bool:
-        return self._thread.is_alive()
+        """False once the loop can no longer deliver events: the engine
+        thread died (crash with an unsupervised engine — ``died`` holds
+        the exception — or clean ``stop()``) or the detokenize thread
+        exhausted its restart budget."""
+        return self._thread.is_alive() and not self.detok_dead
+
+    @property
+    def health(self) -> str:
+        """``ok | degraded | draining | dead`` for ``/healthz``: dead/
+        draining are loop-level states; a supervised engine contributes
+        its own degraded/draining/dead states beneath them."""
+        if not self.alive:
+            return DEAD
+        if self.draining:
+            return DRAINING
+        return getattr(self.engine, "health", OK)
+
+    def drain(self):
+        """Stop admissions (``probe`` answers ``Draining`` -> 503) while
+        in-flight work runs to completion; ``drained`` flips once the
+        engine is empty. Callable from any thread."""
+        self.draining = True
+        if hasattr(self.engine, "drain"):
+            self._cmds.put(("drain", None, None))
+
+    @property
+    def drained(self) -> bool:
+        return (self.draining
+                and not self.engine.has_work and not self._by_rid)
 
     def probe(self, prompt_len: int, max_tokens: int) -> Optional[Exception]:
         """Read-only admission probe (safe off-thread: counters only; the
         engine-thread submit re-validates, so staleness costs one retry,
         never corrupted state)."""
+        if not self.alive:
+            return EngineDied("engine loop is dead"
+                              + (f": {self.died}" if self.died else ""))
+        if self.draining:
+            return Draining("server is draining; not accepting work")
         return self.engine.would_accept(prompt_len, max_tokens)
 
     def submit(self, lc: RequestLifecycle) -> asyncio.Future:
@@ -150,24 +194,86 @@ class EngineLoop:
     def _run(self):
         try:
             while not self._stop.is_set():
-                busy = self.engine.scheduler.has_work
+                busy = self.engine.has_work
                 self._drain_cmds(block=not busy)
                 if self._stop.is_set():
                     break
-                if self.engine.scheduler.has_work:
+                if self.engine.has_work:
                     self.engine.step()
                     self._apply_updates(self.engine.stream_updates(),
                                         time.monotonic())
+                self._drain_failures(time.monotonic())
                 self._check_deadlines(time.monotonic())
+                self._ensure_detok()
                 self.metrics.sync_engine(self.engine)
+        except BaseException as e:
+            # an unsupervised engine's step() crashing lands here (a
+            # supervised one contains it); record the cause so probe/
+            # healthz can name it, then fail everything below
+            self.died = e
         finally:
             # fail every in-flight request loudly rather than hanging its
             # handler forever (healthz flips to 503 via `alive`)
             now = time.monotonic()
-            for rid, lc in list(self._by_rid.items()):
-                lc.on_finish(FINISH_CANCELLED, now)
-                self._emit(lc, ("finish", FINISH_CANCELLED))
+            if self.died is not None:
+                msg = (f"engine loop died: "
+                       f"{type(self.died).__name__}: {self.died}")
+                for rid, lc in list(self._by_rid.items()):
+                    lc.on_finish(FINISH_ERROR, now)
+                    self._emit(lc, ("error", msg))
+            else:
+                for rid, lc in list(self._by_rid.items()):
+                    lc.on_finish(FINISH_CANCELLED, now)
+                    self._emit(lc, ("finish", FINISH_CANCELLED))
             self._by_rid.clear()
+            self._fail_queued_submits()
+
+    def _fail_queued_submits(self):
+        """Submit commands still queued when the loop exits would leave
+        their handlers awaiting a future nobody will ever resolve."""
+        err = EngineDied("engine loop is gone"
+                         + (f": {self.died}" if self.died else ""))
+        while True:
+            try:
+                cmd = self._cmds.get_nowait()
+            except queue.Empty:
+                return
+            if cmd is not None and cmd[0] == "submit":
+                lc, fut = cmd[1], cmd[2]
+                try:
+                    lc.loop.call_soon_threadsafe(_set_future, fut, err)
+                except RuntimeError:
+                    pass
+
+    def _drain_failures(self, now: float):
+        """Requests a supervised engine *failed* (poison quarantine, engine
+        death) finish with an error event -> HTTP 500 naming the cause."""
+        pop = getattr(self.engine, "pop_failures", None)
+        if pop is None:
+            return
+        for rid, err in pop().items():
+            lc = self._by_rid.pop(rid, None)
+            if lc is None:
+                continue
+            lc.on_finish(FINISH_ERROR, now)
+            self._emit(lc, ("error", f"{type(err).__name__}: {err}"))
+
+    def _ensure_detok(self):
+        """Detect a dead detokenize thread and restart it (bounded). The
+        fault site fires *between* batches, so a dying thread never
+        half-delivers an event; the queue content survives intact for its
+        replacement."""
+        if self._detok_thread.is_alive() or self._stop.is_set():
+            return
+        if self.n_detok_restarts >= self.max_detok_restarts:
+            self.detok_dead = True              # alive -> False, healthz 503
+            return
+        self.n_detok_restarts += 1
+        self.metrics.detok_restarts.set_to(self.n_detok_restarts)
+        self._detok_thread = threading.Thread(target=self._detok_run,
+                                              daemon=True,
+                                              name="msb-detokenize")
+        self._detok_thread.start()
 
     def _drain_cmds(self, block: bool):
         while True:
@@ -183,10 +289,14 @@ class EngineLoop:
                 self._do_submit(cmd[1], cmd[2])
             elif cmd[0] == "cancel":
                 self._do_cancel(cmd[1], cmd[2])
+            elif cmd[0] == "drain":
+                self.engine.drain()
 
     def _do_submit(self, lc: RequestLifecycle, fut: asyncio.Future):
         p = lc.params
         try:
+            if self.draining:                   # raced the drain flag
+                raise Draining("server is draining; not accepting work")
             rid = self.engine.submit(p.prompt, p.max_tokens,
                                      eos_id=p.eos_id)
         except Exception as e:                  # probe->submit race
@@ -256,7 +366,17 @@ class EngineLoop:
 
     # -- detokenize thread --------------------------------------------------
     def _detok_run(self):
+        try:
+            self._detok_batches()
+        except Exception as e:                  # noqa: BLE001
+            # the thread dies (injected or real); queued batches survive
+            # untouched for the restarted thread (`_ensure_detok`)
+            self.detok_err = e
+
+    def _detok_batches(self):
         while True:
+            if self.faults.armed:
+                self.faults.fire("detok")       # pre-get: nothing is lost
             batch = self._detok_q.get()
             if batch is None:
                 return
@@ -290,16 +410,18 @@ class APIServer:
                  detokenize: Optional[Callable[[int], str]] = None,
                  default_max_tokens: int = 16, max_tokens_cap: int = 2048,
                  max_timeout_s: Optional[float] = None,
-                 retry_after_s: float = 1.0):
+                 retry_after_s: float = 1.0, faults=NO_FAULTS):
         self.host, self.port = host, port
-        self.model_name = model_name or engine.model.cfg.name
-        self.vocab_size = int(engine.model.cfg.vocab_size)
+        model = getattr(engine, "engine", engine).model  # unwrap supervisor
+        self.model_name = model_name or model.cfg.name
+        self.vocab_size = int(model.cfg.vocab_size)
         self.default_max_tokens = default_max_tokens
         self.max_tokens_cap = max_tokens_cap
         self.max_timeout_s = max_timeout_s
         self.retry_after_s = retry_after_s
+        self.faults = faults
         self.engine_loop = EngineLoop(engine, metrics=metrics,
-                                      detokenize=detokenize)
+                                      detokenize=detokenize, faults=faults)
         self.metrics = self.engine_loop.metrics
         self._loop: Optional[asyncio.AbstractEventLoop] = None
         self._shutdown: Optional[asyncio.Event] = None
@@ -319,13 +441,24 @@ class APIServer:
             raise RuntimeError("API server failed to bind")
         return self.host, self.port
 
-    def run(self):
-        """Serve until interrupted (the CLI path)."""
+    def run(self, drain_grace_s: float = 30.0):
+        """Serve until interrupted (the CLI path). SIGTERM/SIGINT initiate
+        a graceful drain (``train.fault.PreemptionHandler``): admissions
+        close with 503, in-flight requests finish (bounded by
+        ``drain_grace_s``), then the process exits cleanly."""
+        from ..train.fault import PreemptionHandler
+        preemption = PreemptionHandler()
         self.engine_loop.start()
         try:
-            asyncio.run(self._amain(None))
+            asyncio.run(self._amain(None, preemption=preemption,
+                                    drain_grace_s=drain_grace_s))
         finally:
+            preemption.restore()
             self.engine_loop.stop()
+
+    def drain(self):
+        """Programmatic drain (same path SIGTERM takes in ``run()``)."""
+        self.engine_loop.drain()
 
     def close(self):
         if self._loop is not None and self._shutdown is not None:
@@ -345,7 +478,8 @@ class APIServer:
         finally:
             self._loop.close()
 
-    async def _amain(self, ready: Optional[threading.Event]):
+    async def _amain(self, ready: Optional[threading.Event],
+                     preemption=None, drain_grace_s: float = 30.0):
         self._shutdown = asyncio.Event()
         server = await asyncio.start_server(self._handle, self.host,
                                             self.port)
@@ -356,7 +490,31 @@ class APIServer:
             print(f"[serve] listening on http://{self.host}:{self.port} "
                   f"(model {self.model_name})")
         async with server:
-            await self._shutdown.wait()
+            if preemption is None:
+                await self._shutdown.wait()
+            else:
+                await self._wait_or_drain(preemption, drain_grace_s)
+
+    async def _wait_or_drain(self, preemption, drain_grace_s: float):
+        """Poll for SIGTERM/SIGINT; on arrival, drain: close admissions
+        (503), let in-flight requests finish (up to ``drain_grace_s``),
+        then fall out of ``_amain`` so the server sockets close."""
+        while not self._shutdown.is_set():
+            if preemption.should_stop():
+                print("[serve] preemption signal: draining "
+                      f"(grace {drain_grace_s:.0f}s)")
+                self.engine_loop.drain()
+                deadline = time.monotonic() + drain_grace_s
+                while (not self.engine_loop.drained
+                       and time.monotonic() < deadline):
+                    await asyncio.sleep(0.05)
+                print("[serve] drained" if self.engine_loop.drained
+                      else "[serve] drain grace expired; exiting anyway")
+                return
+            try:
+                await asyncio.wait_for(self._shutdown.wait(), timeout=0.1)
+            except asyncio.TimeoutError:
+                pass
 
     # -- HTTP plumbing ------------------------------------------------------
     async def _handle(self, reader: asyncio.StreamReader,
@@ -402,11 +560,17 @@ class APIServer:
             return await self._send_json(writer, 405, _err(
                 f"{method} not allowed on {path}", "protocol_error"))
         if path == "/healthz":
-            ok = self.engine_loop.alive
+            health = self.engine_loop.health
+            body = {"status": health, "model": self.model_name}
+            stats = getattr(self.engine_loop.engine, "stats", None)
+            if stats is not None:
+                st = stats()
+                for k in ("restarts", "watchdog_trips", "quarantined"):
+                    if k in st:
+                        body[k] = st[k]
+            # ok/degraded keep serving (200); draining/dead do not (503)
             return await self._send_json(
-                writer, 200 if ok else 503,
-                {"status": "ok" if ok else "engine loop dead",
-                 "model": self.model_name})
+                writer, 200 if health in (OK, DEGRADED) else 503, body)
         if path == "/v1/models":
             return await self._send_json(writer, 200, {
                 "object": "list",
@@ -462,13 +626,28 @@ class APIServer:
             watcher.cancel()
 
     async def _reject(self, writer, err: Exception):
+        retry = ((b"Retry-After",
+                  str(int(math.ceil(self.retry_after_s))).encode()),)
         if isinstance(err, Saturated):
+            # transient *capacity* condition: back off and retry (429)
             self.metrics.requests.inc(outcome="saturated")
             return await self._send_json(
                 writer, 429, _err(f"server saturated, retry later: {err}",
-                                  "overloaded_error"),
-                extra=((b"Retry-After",
-                        str(int(math.ceil(self.retry_after_s))).encode()),))
+                                  "overloaded_error"), extra=retry)
+        if isinstance(err, Recovering):
+            # transient *availability* condition: the replica is rebuilding
+            # after a crash — distinct from saturation so load balancers
+            # can tell "shed load" from "replica briefly down" (503)
+            self.metrics.requests.inc(outcome="recovering")
+            return await self._send_json(
+                writer, 503, _err(str(err), "unavailable_error"),
+                extra=retry)
+        if isinstance(err, (Draining, EngineDied)):
+            # permanent for this replica: go elsewhere (503, no Retry-After)
+            self.metrics.requests.inc(
+                outcome="draining" if isinstance(err, Draining) else "dead")
+            return await self._send_json(
+                writer, 503, _err(str(err), "unavailable_error"))
         self.metrics.requests.inc(outcome="rejected")
         return await self._send_json(writer, 400, _err(
             str(err), "invalid_request_error"))
@@ -513,7 +692,27 @@ class APIServer:
             out, done = bytearray(), False
             for event in events:
                 if event[0] == "tokens":
+                    if self.faults.armed:
+                        try:
+                            # injected mid-stream connection drop: fires
+                            # per token-bearing frame
+                            self.faults.fire("socket")
+                        except Exception:
+                            self.engine_loop.cancel(lc, FINISH_CANCELLED)
+                            try:
+                                writer.transport.abort()
+                            except Exception:
+                                pass
+                            return
                     out += _sse(self._chunk(lc, event[2], event[1], None))
+                elif event[0] == "error":       # engine-side failure
+                    frame = self._chunk(lc, "", [], FINISH_ERROR)
+                    frame["error"] = {"message": event[1],
+                                      "type": "engine_error"}
+                    out += _sse(frame)
+                    out += b"data: [DONE]\n\n"
+                    done = True
+                    break
                 else:                           # ("finish", reason)
                     out += _sse(self._chunk(lc, "", [], event[1]))
                     out += b"data: [DONE]\n\n"
@@ -535,6 +734,9 @@ class APIServer:
             if event[0] == "tokens":
                 ids.extend(event[1])
                 pieces.append(event[2])
+            elif event[0] == "error":           # engine-side failure: 500
+                return await self._send_json(writer, 500, _err(
+                    event[1], "engine_error"), best_effort=True)
             else:
                 reason = event[1]
                 break

@@ -139,3 +139,63 @@ def test_table_rows_pads_inactive(model):
     assert rows.shape[0] == 2
     assert (rows[0][:2] == c.block_tables[s][:2]).all()
     assert (rows[1] == 0).all()
+
+
+# -- the invariant audit itself ----------------------------------------------
+def test_check_invariants_clean_busy_and_idle(model):
+    c = make_cache(model)
+    s = c.alloc_slot()
+    c.reserve(s, 9)
+    c.commit(s, 9)
+    c.check_invariants()                 # live sequence: fine
+    with pytest.raises(PageStateError, match="live"):
+        c.check_invariants(expect_idle=True)
+    c.release(s)
+    c.check_invariants(expect_idle=True)
+
+
+def test_check_invariants_catches_leaked_page(model):
+    c = make_cache(model)
+    s = c.alloc_slot()
+    c.reserve(s, 4)
+    c.release(s)
+    c._free.remove(c._free[0])           # page vanishes from every set
+    with pytest.raises(PageStateError, match="conservation"):
+        c.check_invariants()
+
+
+def test_check_invariants_catches_refcount_drift(model):
+    c = make_cache(model)
+    s = c.alloc_slot()
+    c.reserve(s, 4)
+    c.ref_counts[c.seq_pages[s][0]] += 1
+    with pytest.raises(PageStateError, match="refcount"):
+        c.check_invariants()
+
+
+def test_check_invariants_catches_table_mirror_break(model):
+    c = make_cache(model)
+    s = c.alloc_slot()
+    c.reserve(s, 8)                      # two pages
+    c.block_tables[s, 1] = 0             # table no longer mirrors seq_pages
+    with pytest.raises(PageStateError, match="block_tables"):
+        c.check_invariants()
+
+
+def test_check_invariants_catches_dirty_free_slot(model):
+    c = make_cache(model)
+    s = c.alloc_slot()
+    c.reserve(s, 4)
+    c.release(s)
+    c.seq_lens[s] = 3                    # ghost length on a freed slot
+    with pytest.raises(PageStateError, match="free slot"):
+        c.check_invariants()
+
+
+def test_check_invariants_catches_free_referenced_overlap(model):
+    c = make_cache(model)
+    s = c.alloc_slot()
+    c.reserve(s, 4)
+    c._free.append(c.seq_pages[s][0])    # double-owned page
+    with pytest.raises(PageStateError):
+        c.check_invariants()
