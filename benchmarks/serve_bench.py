@@ -59,6 +59,13 @@ engine mid-flight (DESIGN.md Sec. 14), asserting token identity and a
 clean page-pool audit (zero leaks) and reporting recovery latency,
 replayed-token overhead, and the end-to-end wall slowdown the faults cost.
 
+A ninth axis (``kv_quant``) re-serves the workload with the paged KV cache
+MSB-quantized at ``kv_bits`` ∈ {16, 8, 4} under one fixed pool byte budget
+(DESIGN.md Sec. 15), asserting >= 3x max-concurrent-sequence capacity at
+4-bit vs bf16, greedy token identity at 8-bit, a clean allocator audit
+after forced preemption on quantized pages, and reporting the codec's
+round-trip reconstruction MSE on actually-served K/V pages.
+
 Emits a JSON comparison to stdout and --out (default
 artifacts/serve_bench.json); see benchmarks/README.md for the schema.
 """
@@ -89,7 +96,7 @@ def _build(seed=0):
     params = jax.tree_util.tree_map(lambda p: p.astype(jnp.float32), params)
     qparams, _ = quantize_params(params, QuantPolicy(
         bits=4, block=64, solver="kmeans", min_size=1024))
-    return model, qparams
+    return model, qparams, params
 
 
 def _requests(rng, n, ragged):
@@ -587,6 +594,144 @@ def _run_fault_recovery_axis(model, qparams, fast):
     }
 
 
+def _run_kv_quant_axis(model, qparams, fparams, fast):
+    """KV-cache quantization axis (DESIGN.md Sec. 15): the same serving
+    workload at ``kv_bits`` 16 / 8 / 4 under one fixed page-pool *byte*
+    budget, so lower-precision pages buy proportionally more of them.
+
+    Reported and asserted per bit-width:
+      * capacity = max concurrent sequences the pool hosts before any
+        preemption (each request leases the same page count, so capacity is
+        pool pages // pages-per-seq, bounded empirically: the analytic
+        cohort must serve with zero preemptions, and the 4-bit cohort must
+        *not* fit the bf16 pool without preempting). Acceptance:
+        capacity(4) >= 3x capacity(16).
+      * greedy token identity vs the bf16 cache on a mixed burst, served
+        with the *full-precision* weights (``fparams``) so the cache codec
+        is the only perturbation — exact at 8-bit (asserted off-TPU; under
+        4-bit weights a near-tie argmax can flip on codec noise, which the
+        execution axis, not this one, owns); at 4-bit KV the drift
+        fraction is reported. Identity before any page commits is exact by
+        construction at every bit-width (the hot path is bf16).
+      * quality proxy: the codec's round-trip ``reconstruction_mse`` (the
+        paper's table metric) on the *actual* K/V pages a bf16 run
+        committed, normalized by signal power — grounded in served
+        activations, not synthetic normals.
+      * a chaos pass: the 4-bit cohort over the tight pool with forced
+        preemption, then a full ``check_invariants`` audit (frontier
+        bookkeeping included) must come back clean.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import (KVQuantSpec, kv_dequantize_pages,
+                            kv_native_page_bytes, kv_quantize_pages,
+                            reconstruction_mse)
+    from repro.serve import ContinuousEngine
+
+    cfg = model.cfg
+    ps = 4
+    spec8 = KVQuantSpec(8, ps, cfg.n_kv_heads, cfg.head_dim_)
+    spec4 = KVQuantSpec(4, ps, cfg.n_kv_heads, cfg.head_dim_)
+    native = kv_native_page_bytes(ps, cfg.n_kv_heads, cfg.head_dim_,
+                                  cfg.dtype)
+    budget = 12 * native                  # one K-or-V pool's byte budget
+    pages = {16: 12, 8: budget // spec8.page_bytes(),
+             4: budget // spec4.page_bytes()}
+    page_bytes = {16: native, 8: spec8.page_bytes(), 4: spec4.page_bytes()}
+
+    # every request leases exactly 4 pages (prompt 4 + budget 12 = 16
+    # tokens) and lives 12 decode steps — long enough that concurrent
+    # leases genuinely contend for the pool instead of draining through it
+    per_seq = 4
+    cap = {b: int(pages[b]) // per_seq for b in (16, 8, 4)}
+    rng = np.random.default_rng(13)
+
+    def cohort(n):
+        return [(rng.integers(0, 64, (ps,)).astype(np.int32), 3 * ps)
+                for _ in range(n)]
+
+    def serve(bits, reqs, n_pages, max_batch, params=qparams):
+        eng = ContinuousEngine(model, params, max_batch=max_batch,
+                               page_size=ps, num_pages=n_pages + 1,
+                               max_seq=8 * ps, prefill_chunk=ps,
+                               kv_bits=bits, prefix_cache=False)
+        rids = [eng.submit(*r) for r in reqs]
+        outs = eng.run()
+        eng.cache.check_invariants()
+        eng.close()
+        return eng, [outs[r].tolist() for r in rids]
+
+    axis = {"page_size": ps, "pool_budget_bytes": int(budget),
+            "pages_per_seq": per_seq, "bits": {}}
+    mb = 16
+    for bits in (16, 8, 4):
+        c = min(cap[bits], mb)
+        eng, _ = serve(bits, cohort(c), int(pages[bits]), mb)
+        assert eng.scheduler.n_preemptions == 0, (
+            f"kv_bits={bits}: analytic capacity {c} preempted")
+        axis["bits"][f"kv{bits}"] = {
+            "page_bytes": int(page_bytes[bits]),
+            "pool_pages": int(pages[bits]),
+            "capacity": int(cap[bits]),
+            "bytes_vs_native": round(page_bytes[bits] / native, 4),
+        }
+    assert cap[4] >= 3 * cap[16], (
+        f"capacity(kv4)={cap[4]} < 3x capacity(kv16)={cap[16]}")
+    axis["capacity_gain_4bit"] = round(cap[4] / cap[16], 2)
+    # a 4-bit-capacity cohort overflows the bf16 pool: preemption must fire
+    # (this doubles as the quantized-pool invariant audit under pressure —
+    # serve() runs check_invariants after every leg)
+    over = min(cap[4], mb)
+    eng, _ = serve(16, cohort(over), int(pages[16]), mb)
+    assert eng.scheduler.n_preemptions > 0, (
+        f"{over} seqs fit the bf16 pool without preemption — budget too lax")
+    eng, _ = serve(4, cohort(over), int(pages[16]), mb)   # tight 4-bit pool
+    assert eng.scheduler.n_preemptions > 0
+    axis["chaos_preemptions_audited"] = int(eng.scheduler.n_preemptions)
+
+    # fidelity burst: mixed lengths, kv16 as reference, full-precision
+    # weights (cache codec is the only perturbation under test)
+    reqs = [(rng.integers(0, 64, (int(rng.integers(4, 12)),))
+             .astype(np.int32), int(rng.integers(4, 10)))
+            for _ in range(4 if fast else 8)]
+    outs = {b: serve(b, reqs, 64, 8, params=fparams)[1] for b in (16, 8, 4)}
+    ident8 = outs[8] == outs[16]
+    if jax.default_backend() != "tpu":
+        assert ident8, "kv_bits=8 greedy decode diverged from bf16 cache"
+    n_tok = sum(len(o) for o in outs[16])
+    drift4 = sum(1 for a, b in zip(outs[16], outs[4]) if a != b)
+    axis["fidelity"] = {"kv8_identical": bool(ident8),
+                       "kv4_diverged_requests": int(drift4),
+                       "n_requests": len(reqs), "n_tokens": int(n_tok)}
+
+    # quality proxy on real committed K/V: round-trip the bf16 run's pages,
+    # sampled mid-flight (a drained engine has released its pages)
+    eng = ContinuousEngine(model, fparams, max_batch=8, page_size=ps,
+                           num_pages=64, max_seq=32, prefill_chunk=ps,
+                           kv_bits=16, prefix_cache=False)
+    for r in reqs[:4]:
+        eng.submit(*r)
+    for _ in range(12):
+        eng.step()
+    k_pool = jax.tree_util.tree_leaves(eng.cache.pools)[0]   # (p, n, ps, kv, hd)
+    used = sorted({p for s in range(eng.cache.max_seqs)
+                   for p in eng.cache.seq_pages[s]})
+    assert used, "mid-flight sample found no leased pages"
+    real = jnp.asarray(np.asarray(k_pool)[:, used])
+    power = float(jnp.sum(jnp.asarray(real, jnp.float32) ** 2))
+    q = {}
+    for bits in (8, 4):
+        codes, scales = kv_quantize_pages(real, bits)
+        rt = kv_dequantize_pages(codes, scales, bits, real.dtype)
+        q[f"kv{bits}"] = round(
+            float(reconstruction_mse(real, rt)) / max(power, 1e-30), 8)
+    assert q["kv8"] <= q["kv4"], q
+    axis["roundtrip_rel_mse"] = q
+    eng.close()
+    return axis
+
+
 def _run_continuous(model, params, reqs, arrivals, warm=True):
     from repro.serve import ContinuousEngine
 
@@ -621,7 +766,7 @@ def main():
     args = ap.parse_args()
 
     rng = np.random.default_rng(0)
-    model, qparams = _build()
+    model, qparams, fparams = _build()
     n_req = 8 if args.fast else 16
 
     patterns = {
@@ -711,6 +856,17 @@ def main():
           f"({fr['replay_overhead_frac']:.1%}) | wall x{fr['wall_slowdown']} "
           f"| identical {fr['outputs_identical']} | pool clean "
           f"{fr['pool_audit_clean']}")
+
+    report["kv_quant"] = _run_kv_quant_axis(model, qparams, fparams,
+                                            args.fast)
+    kq = report["kv_quant"]
+    print("[serve_bench] kv_quant axis: "
+          + " | ".join(f"{k} {v['pool_pages']}p cap {v['capacity']}"
+                       for k, v in kq["bits"].items())
+          + f" | 4-bit capacity x{kq['capacity_gain_4bit']} | kv8 identical "
+          f"{kq['fidelity']['kv8_identical']} | rel-mse "
+          f"kv8 {kq['roundtrip_rel_mse']['kv8']:.2e} "
+          f"kv4 {kq['roundtrip_rel_mse']['kv4']:.2e}")
 
     os.makedirs(os.path.dirname(args.out), exist_ok=True)
     with open(args.out, "w") as f:

@@ -375,6 +375,175 @@ def packed_gather(pq: PackedQTensor, idx):
 
 
 # ---------------------------------------------------------------------------
+# KV-page codec (serving path; DESIGN.md Sec. 15)
+#
+# MSB block-wise quantization applied to *committed* KV-cache pages: one
+# (page_size, head_dim) payload per KV head is split into groups of
+# KV_BLOCK elements covering whole token rows, and each group gets its own
+# codebook (4-bit: a 2^{b-1}-entry MSB codebook from the exact DP solver;
+# 8-bit: a single absmax scale with sign-magnitude int8 codes). Groups
+# never cross heads, so head-sharded pools quantize identically per shard,
+# and the functions are pure and deterministic — the supervisor's
+# token-identical replay holds on quantized pools.
+# ---------------------------------------------------------------------------
+
+KV_BLOCK = 128       # max elements per KV quantization group
+
+
+def _kv_tokens_per_block(page_size, head_dim):
+    """Token rows per group: whole-hd rows, <= KV_BLOCK elements, dividing
+    the page. Static python ints — resolved at trace time."""
+    tpb = max(1, min(int(page_size), KV_BLOCK // int(head_dim)))
+    while page_size % tpb:
+        tpb -= 1
+    return tpb
+
+
+@dataclasses.dataclass(frozen=True)
+class KVQuantSpec:
+    """Static shape/byte schema of a quantized KV page pool (hashable, so
+    it can ride through jit as a static argument). ``kv_heads`` is the
+    *local* head count under tensor parallelism — grouping is per head, so
+    the schema shards trivially along the head dim."""
+    bits: int            # 8 or 4 (16 = unquantized native pools, no spec)
+    page_size: int
+    kv_heads: int
+    head_dim: int
+
+    def __post_init__(self):
+        if self.bits not in (4, 8):
+            raise ValueError(f"kv_bits must be 4 or 8, got {self.bits}")
+        if self.bits == 4 and self.head_dim % 2:
+            raise ValueError("4-bit KV packing needs an even head_dim")
+
+    @property
+    def tokens_per_block(self):
+        return _kv_tokens_per_block(self.page_size, self.head_dim)
+
+    @property
+    def block(self):
+        return self.tokens_per_block * self.head_dim
+
+    @property
+    def n_blocks(self):
+        return self.page_size // self.tokens_per_block
+
+    @property
+    def n_levels(self):
+        return 2 ** (self.bits - 1) if self.bits == 4 else 1
+
+    @property
+    def codes_tail(self):
+        """Trailing dims of the codes leaf for one page."""
+        hd = self.head_dim // 2 if self.bits == 4 else self.head_dim
+        return (self.page_size, self.kv_heads, hd)
+
+    @property
+    def scales_tail(self):
+        return (self.kv_heads, self.n_blocks, self.n_levels)
+
+    @property
+    def scale_dtype(self):
+        # 4-bit keeps the paper's 16-bit codebook entries (Sec. 4.1
+        # storage math); the 8-bit absmax is one f32 per 128 elements —
+        # negligible, and it keeps the round-trip error centred.
+        return jnp.bfloat16 if self.bits == 4 else jnp.float32
+
+    def page_bytes(self):
+        """Allocated bytes per page per K-or-V tensor (one layer period)."""
+        codes = int(np.prod(self.codes_tail))
+        scales = (int(np.prod(self.scales_tail))
+                  * jnp.dtype(self.scale_dtype).itemsize)
+        return codes + scales
+
+
+def kv_native_page_bytes(page_size, kv_heads, head_dim, dtype):
+    """Pool bytes per page per K-or-V tensor at ``kv_bits=16`` (native)."""
+    return (int(page_size) * int(kv_heads) * int(head_dim)
+            * jnp.dtype(dtype).itemsize)
+
+
+def _kv_to_blocks(x, tpb):
+    """(..., ps, kv, hd) -> (..., kv, n_blocks, tpb*hd)."""
+    *lead, ps, kv, hd = x.shape
+    y = x.reshape(*lead, ps // tpb, tpb, kv, hd)
+    y = jnp.moveaxis(y, -2, -4)                 # (..., kv, nb, tpb, hd)
+    return y.reshape(*lead, kv, ps // tpb, tpb * hd)
+
+
+def _kv_from_blocks(y, tpb, head_dim):
+    """(..., kv, n_blocks, tpb*hd) -> (..., ps, kv, hd)."""
+    *lead, kv, nb, blk = y.shape
+    y = y.reshape(*lead, kv, nb, tpb, head_dim)
+    y = jnp.moveaxis(y, -4, -2)                 # (..., nb, tpb, kv, hd)
+    return y.reshape(*lead, nb * tpb, kv, head_dim)
+
+
+def kv_quantize_pages(x, bits):
+    """Quantize KV pages. x: (..., page_size, KV, head_dim) f32/bf16.
+
+    Returns ``(codes, scales)``:
+      * 4-bit: codes uint8 (..., ps, KV, hd//2) — two MSB nibbles per byte,
+        ``(sign << 3) | level`` with element 2i in the low nibble; scales
+        bf16 (..., KV, n_blocks, 8), the per-group DP codebook sorted
+        ascending (exact zeros group at level 0 with scale 0, so they
+        survive the round trip exactly whenever they form their own group).
+      * 8-bit: codes int8 (..., ps, KV, hd) sign-magnitude
+        ``round(x * 127 / absmax)``; scales f32 (..., KV, n_blocks, 1)
+        holding the group absmax (so 0 and +-absmax round-trip exactly).
+
+    Pure and deterministic: same page bytes in, same code bytes out, every
+    call — required for supervisor replay (DESIGN.md Sec. 14).
+    """
+    *lead, ps, kv, hd = x.shape
+    tpb = _kv_tokens_per_block(ps, hd)
+    nb, blk = ps // tpb, tpb * hd
+    xf = x.astype(jnp.float32)
+    blocks = _kv_to_blocks(xf, tpb)                     # (..., kv, nb, blk)
+    if bits == 8:
+        amax = jnp.max(jnp.abs(blocks), axis=-1, keepdims=True)
+        q = jnp.clip(jnp.round(blocks * (127.0 / jnp.maximum(amax, 1e-30))),
+                     -127.0, 127.0)
+        codes = _kv_from_blocks(q, tpb, hd).astype(jnp.int8)
+        return codes, amax
+    if bits != 4:
+        raise ValueError(f"kv_bits must be 4 or 8, got {bits}")
+    g = 8
+    levels, scales = grouping.solve_blocks(blocks.reshape(-1, blk), g,
+                                           method="dp")
+    levels = levels.reshape(blocks.shape)
+    scales = scales.reshape(*lead, kv, nb, g).astype(jnp.bfloat16)
+    nib = jnp.where(blocks < 0, levels | 8, levels)     # sign<<3 | level
+    nib = _kv_from_blocks(nib, tpb, hd)                 # (..., ps, kv, hd)
+    pair = nib.reshape(*nib.shape[:-1], hd // 2, 2)
+    codes = ((pair[..., 1] << 4) | pair[..., 0]).astype(jnp.uint8)
+    return codes, scales
+
+
+def kv_dequantize_pages(codes, scales, bits, dtype):
+    """Inverse of ``kv_quantize_pages`` -> (..., ps, KV, hd) in ``dtype``."""
+    if bits == 8:
+        *lead, ps, kv, hd = codes.shape
+        tpb = _kv_tokens_per_block(ps, hd)
+        blocks = _kv_to_blocks(codes.astype(jnp.float32), tpb)
+        out = blocks * (scales.astype(jnp.float32) / 127.0)
+        return _kv_from_blocks(out, tpb, hd).astype(dtype)
+    if bits != 4:
+        raise ValueError(f"kv_bits must be 4 or 8, got {bits}")
+    *lead, ps, kv, hdc = codes.shape
+    hd = hdc * 2
+    tpb = _kv_tokens_per_block(ps, hd)
+    p32 = codes.astype(jnp.int32)
+    nib = jnp.stack([p32 & 0xF, (p32 >> 4) & 0xF],
+                    axis=-1).reshape(*lead, ps, kv, hd)
+    nb_ = _kv_to_blocks(nib, tpb)                       # (..., kv, nb, blk)
+    level = nb_ & 0x7
+    sign = (1 - 2 * ((nb_ >> 3) & 1)).astype(jnp.float32)
+    mag = jnp.take_along_axis(scales.astype(jnp.float32), level, axis=-1)
+    return _kv_from_blocks(sign * mag, tpb, hd).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
 # Tensor-parallel padding (DESIGN.md Sec. 10)
 #
 # Sharding a quantized matmul dim across a mesh axis needs every rank's

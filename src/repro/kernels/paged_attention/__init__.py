@@ -1,6 +1,9 @@
-from .ops import paged_attention
-from .paged_attention import paged_attention_decode
-from .ref import paged_attention_decode_ref
+from .ops import paged_attention, paged_attention_kv_quant
+from .paged_attention import (paged_attention_decode,
+                              paged_attention_decode_quant)
+from .ref import (paged_attention_decode_quant_ref,
+                  paged_attention_decode_ref)
 
 __all__ = ["paged_attention", "paged_attention_decode",
-           "paged_attention_decode_ref"]
+           "paged_attention_decode_ref", "paged_attention_kv_quant",
+           "paged_attention_decode_quant", "paged_attention_decode_quant_ref"]

@@ -10,8 +10,10 @@ from __future__ import annotations
 
 import jax
 
-from .paged_attention import paged_attention_decode
-from .ref import paged_attention_decode_ref
+from .paged_attention import (paged_attention_decode,
+                              paged_attention_decode_quant)
+from .ref import (paged_attention_decode_quant_ref,
+                  paged_attention_decode_ref)
 
 
 def paged_attention(q, k_pool, v_pool, block_tables, kv_lens, *, softcap=0.0,
@@ -26,3 +28,24 @@ def paged_attention(q, k_pool, v_pool, block_tables, kv_lens, *, softcap=0.0,
                                       interpret=interpret)
     return paged_attention_decode_ref(q, k_pool, v_pool, block_tables,
                                       kv_lens, softcap=softcap, scale=scale)
+
+
+def paged_attention_kv_quant(q, k_codes, k_scales, v_codes, v_scales, k_hot,
+                             v_hot, block_tables, kv_lens, hot_rows, *,
+                             kv_bits, softcap=0.0, scale=None,
+                             use_kernel=None, interpret=None):
+    """Fused-dequant paged-attention decode over MSB-quantized pools
+    (kv_bits 8|4): Pallas kernel on TPU, jnp gather+dequant oracle
+    elsewhere. See paged_attention_decode_quant for the argument layout."""
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if use_kernel:
+        return paged_attention_decode_quant(
+            q, k_codes, k_scales, v_codes, v_scales, k_hot, v_hot,
+            block_tables, kv_lens, hot_rows, kv_bits=kv_bits,
+            softcap=softcap, scale=scale, interpret=interpret)
+    return paged_attention_decode_quant_ref(
+        q, k_codes, k_scales, v_codes, v_scales, k_hot, v_hot, block_tables,
+        kv_lens, hot_rows, kv_bits=kv_bits, softcap=softcap, scale=scale)

@@ -17,3 +17,21 @@ def paged_attention_decode_ref(q, k_pool, v_pool, block_tables, kv_lens, *,
     out = _pa(q[:, None], k_pool, v_pool, block_tables, q_pos,
               kv_lens.astype(jnp.int32), softcap=softcap, scale=scale)
     return out[:, 0]
+
+
+def paged_attention_decode_quant_ref(q, k_codes, k_scales, v_codes, v_scales,
+                                     k_hot, v_hot, block_tables, kv_lens,
+                                     hot_rows, *, kv_bits, softcap=0.0,
+                                     scale=None):
+    """Oracle for the fused-dequant kernel: gather + dequantize via
+    models.attention.paged_attention_quant (same codec math, materialized).
+    ``hot_rows`` (B,) = slot + 1 (0 = scratch), matching the kernel."""
+    from ...models.attention import paged_attention_quant as _paq
+    cache = {"k_codes": k_codes, "k_scales": k_scales, "v_codes": v_codes,
+             "v_scales": v_scales, "k_hot": k_hot, "v_hot": v_hot}
+    q_pos = (kv_lens - 1).reshape(-1, 1).astype(jnp.int32)
+    slots = hot_rows.astype(jnp.int32) - 1
+    out = _paq(q[:, None], cache, block_tables, q_pos,
+               kv_lens.astype(jnp.int32), slots, kv_bits,
+               softcap=softcap, scale=scale)
+    return out[:, 0]

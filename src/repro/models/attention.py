@@ -290,16 +290,28 @@ def paged_attention(q, k_pool, v_pool, block_tables, q_pos, kv_lens, *,
     q with H/tp heads against pools holding KV/tp heads (same GQA ratio) —
     with no collective; block tables, positions and lengths are replicated.
     """
+    k = k_pool[block_tables].reshape(q.shape[0], -1, k_pool.shape[2],
+                                     k_pool.shape[3])
+    v = v_pool[block_tables].reshape(*k.shape)
+    return _attend_gathered(q, k, v, q_pos, kv_lens, window=window,
+                            softcap=softcap, scale=scale)
+
+
+def _attend_gathered(q, k, v, q_pos, kv_lens, *, window=0, softcap=0.0,
+                     scale=None):
+    """Masked softmax attention over already-materialized per-sequence K/V.
+
+    q: (B, T, H, d); k/v: (B, S, KV, d) — the gathered (and, on the
+    quantized path, dequantized) cache with absolute position ``kpos = s``.
+    Shared core of ``paged_attention`` and ``paged_attention_quant``.
+    """
     b, t, h, d = q.shape
-    n_pages, ps, kv, _ = k_pool.shape
-    mp = block_tables.shape[1]
+    kv = k.shape[2]
     rep = h // kv
     scale = scale if scale is not None else 1.0 / (d ** 0.5)
     window = jnp.asarray(window, jnp.int32)
-    k = k_pool[block_tables].reshape(b, mp * ps, kv, d)
-    v = v_pool[block_tables].reshape(b, mp * ps, kv, d)
-    kpos = jnp.arange(mp * ps, dtype=jnp.int32)
-    qh = q.reshape(b, t, kv, rep, d).astype(k_pool.dtype)
+    kpos = jnp.arange(k.shape[1], dtype=jnp.int32)
+    qh = q.reshape(b, t, kv, rep, d).astype(k.dtype)
     s = jnp.einsum("btkrd,bskd->btkrs", qh, k,
                    preferred_element_type=jnp.float32) * scale
     s = _softcap(s, softcap)
@@ -310,7 +322,7 @@ def paged_attention(q, k_pool, v_pool, block_tables, q_pos, kv_lens, *,
     m = jnp.max(s, axis=-1, keepdims=True)
     p = jnp.exp(s - m)
     l = jnp.sum(p, axis=-1)
-    out = jnp.einsum("btkrs,bskd->btkrd", p.astype(v_pool.dtype), v,
+    out = jnp.einsum("btkrs,bskd->btkrd", p.astype(v.dtype), v,
                      preferred_element_type=jnp.float32)
     out = out / jnp.maximum(l, 1e-30)[..., None]
     return out.reshape(b, t, h, d).astype(q.dtype)
@@ -335,3 +347,127 @@ def paged_write(k_pool, v_pool, k_new, v_new, block_tables, q_pos):
         v_new.reshape(-1, kv, d).astype(v_pool.dtype)).reshape(
             n_pages, ps, kv, d)
     return k_pool, v_pool
+
+
+# ---------------------------------------------------------------------------
+# Quantized page pools (kv_bits < 16; DESIGN.md Sec. 15)
+#
+# Dual-pool layout per layer period:
+#   k_codes/v_codes   (n_pages, ps, KV, hd or hd//2)  packed committed pages
+#   k_scales/v_scales (n_pages, KV, n_blocks, G)      per-page codebooks
+#   k_hot/v_hot       (max_seqs+1, ps, KV, hd)        bf16 hot partial pages
+#
+# Each live slot owns exactly one partial (hot) page — its last — kept
+# full-precision in hot row ``slot + 1`` (row 0 is the pad-row scratch
+# mirror of pool page 0). Writes land in the hot row; any page the chunk
+# *completes* is quantized device-side in the same dispatch and scattered
+# into the packed pools, so a decode-horizon scan crosses page boundaries
+# with no host round trip and every committed page is quantized by
+# construction (the invariant PagedKVCache.check_invariants audits).
+# ---------------------------------------------------------------------------
+
+
+def paged_write_quant(cache, k_new, v_new, block_tables, q_pos, kv_lens,
+                      slots, kv_bits):
+    """Hot-page write + commit-time quantization (quantize-on-commit).
+
+    cache: dict(k_codes, v_codes, k_scales, v_scales, k_hot, v_hot) — one
+    layer period's leaves; k_new/v_new: (B, T, KV, hd) roped; q_pos (B, T)
+    absolute positions (-1 = pad); kv_lens (B,) length incl. this chunk;
+    slots (B,) engine slot ids (-1 = pad row); kv_bits: static 4 or 8.
+
+    New positions in a row's *final* page go to its hot row; every page
+    this chunk completes (up to T // ps + 1 of them) is gathered from (old
+    hot partial content, this chunk's rows), quantized with the MSB KV
+    codec, and scattered into the packed pools. Pad rows and non-completed
+    candidates write hot row 0 / packed page 0 (the reserved scratch).
+    """
+    from ..core.quantize import kv_quantize_pages
+    k_hot, v_hot = cache["k_hot"], cache["v_hot"]
+    n_hot, ps, kv, hd = k_hot.shape
+    b, t = q_pos.shape
+    mp = block_tables.shape[1]
+    dtype = k_hot.dtype
+    row = jnp.where(slots >= 0, slots + 1, 0)                     # (B,)
+
+    # -- hot write: only the final (still-partial-capable) page's positions
+    frontier = kv_lens // ps
+    in_final = (q_pos >= 0) & (q_pos // ps == frontier[:, None])
+    wrow = jnp.where(in_final, row[:, None], 0)
+    flat = jnp.where(in_final,
+                     wrow * ps + jnp.maximum(q_pos, 0) % ps, 0).reshape(-1)
+    k_hot_new = k_hot.reshape(n_hot * ps, kv, hd).at[flat].set(
+        k_new.reshape(-1, kv, hd).astype(dtype)).reshape(n_hot, ps, kv, hd)
+    v_hot_new = v_hot.reshape(n_hot * ps, kv, hd).at[flat].set(
+        v_new.reshape(-1, kv, hd).astype(dtype)).reshape(n_hot, ps, kv, hd)
+
+    # -- commit-quantize every page this chunk completes
+    n_valid = jnp.sum((q_pos >= 0).astype(jnp.int32), axis=1)     # (B,)
+    start = kv_lens - n_valid                  # first position of the chunk
+    n_cand = t // ps + 1
+    i = jnp.arange(n_cand, dtype=jnp.int32)
+    jp = start[:, None] // ps + i[None, :]                        # (B, nc)
+    completed = ((jp + 1) * ps <= kv_lens[:, None]) & (n_valid[:, None] > 0)
+    gp = jp[:, :, None] * ps + jnp.arange(ps, dtype=jnp.int32)    # (B, nc, ps)
+    tidx = jnp.clip(gp - start[:, None, None], 0, t - 1)
+    bidx = jnp.arange(b)[:, None, None]
+    from_new = (gp >= start[:, None, None])[..., None, None]
+    # page content: positions >= start from this chunk, earlier positions
+    # from the *old* hot row (the partial content being completed; the page
+    # offset is gp % ps == the hot-row offset by alignment)
+    k_content = jnp.where(from_new, k_new[bidx, tidx].astype(dtype),
+                          k_hot[row][:, None])
+    v_content = jnp.where(from_new, v_new[bidx, tidx].astype(dtype),
+                          v_hot[row][:, None])
+    kq_codes, kq_scales = kv_quantize_pages(k_content, kv_bits)
+    vq_codes, vq_scales = kv_quantize_pages(v_content, kv_bits)
+    pidx = jnp.where(
+        completed,
+        jnp.take_along_axis(block_tables, jnp.clip(jp, 0, mp - 1), axis=1),
+        0).reshape(-1)
+    flat2 = lambda a: a.reshape((-1,) + a.shape[2:])
+    return {
+        "k_codes": cache["k_codes"].at[pidx].set(flat2(kq_codes)),
+        "v_codes": cache["v_codes"].at[pidx].set(flat2(vq_codes)),
+        "k_scales": cache["k_scales"].at[pidx].set(
+            flat2(kq_scales).astype(cache["k_scales"].dtype)),
+        "v_scales": cache["v_scales"].at[pidx].set(
+            flat2(vq_scales).astype(cache["v_scales"].dtype)),
+        "k_hot": k_hot_new,
+        "v_hot": v_hot_new,
+    }
+
+
+def paged_attention_quant(q, cache, block_tables, q_pos, kv_lens, slots,
+                          kv_bits, *, window=0, softcap=0.0, scale=None):
+    """Attention over quantized page pools + the bf16 hot partial page.
+
+    The jnp oracle of the fused-dequant gather: committed pages are
+    gathered via block tables and dequantized with the MSB KV codec; the
+    frontier (partial) page positions are overlaid from the row's hot
+    buffer, so the hot tail is read at full precision. The Pallas kernel
+    (kernels/paged_attention) fuses the dequant into the page stream and
+    never materializes this (B, S, KV, hd) copy.
+    """
+    from ..core.quantize import kv_dequantize_pages
+    k_hot = cache["k_hot"]
+    n_hot, ps, kv, hd = k_hot.shape
+    b = q.shape[0]
+    mp = block_tables.shape[1]
+    dtype = k_hot.dtype
+    k_deq = kv_dequantize_pages(cache["k_codes"][block_tables],
+                                cache["k_scales"][block_tables],
+                                kv_bits, dtype).reshape(b, mp * ps, kv, hd)
+    v_deq = kv_dequantize_pages(cache["v_codes"][block_tables],
+                                cache["v_scales"][block_tables],
+                                kv_bits, dtype).reshape(b, mp * ps, kv, hd)
+    row = jnp.where(slots >= 0, slots + 1, 0)
+    frontier = kv_lens // ps
+    kpos = jnp.arange(mp * ps, dtype=jnp.int32)
+    in_hot = ((kpos[None, :] // ps) == frontier[:, None])[..., None, None]
+    hot_k = cache["k_hot"][row][:, kpos % ps]         # (B, S, KV, hd)
+    hot_v = cache["v_hot"][row][:, kpos % ps]
+    k = jnp.where(in_hot, hot_k, k_deq)
+    v = jnp.where(in_hot, hot_v, v_deq)
+    return _attend_gathered(q, k, v, q_pos, kv_lens, window=window,
+                            softcap=softcap, scale=scale)

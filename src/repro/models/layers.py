@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from .attention import (decode_attention, flash_attention, paged_attention,
-                        paged_write)
+                        paged_attention_quant, paged_write, paged_write_quant)
 
 
 def rms_norm(x, scale, eps=1e-6):
@@ -180,6 +180,17 @@ def attention_layer(p, x, cfg, positions, *, window=0, cache=None,
             safe_pos = jnp.maximum(q_pos, 0)
             q = rope(q, safe_pos, cfg.rope_theta)
             k = rope(k, safe_pos, cfg.rope_theta)
+        if "k_codes" in cache:
+            # quantized pools (kv_bits < 16): hot-page write + commit-time
+            # quantization, attention fuses dequant into the gather
+            new_cache = paged_write_quant(
+                cache, k, v, paged["block_tables"], q_pos, paged["kv_lens"],
+                paged["slots"], paged["kv_bits"])
+            out = paged_attention_quant(
+                q, new_cache, paged["block_tables"], q_pos, paged["kv_lens"],
+                paged["slots"], paged["kv_bits"], window=window,
+                softcap=softcap, scale=scale)
+            return _attn_out_proj(out, p["wo"], tp, h), new_cache
         k_pool, v_pool = paged_write(cache["k"], cache["v"], k, v,
                                      paged["block_tables"], q_pos)
         out = paged_attention(q, k_pool, v_pool, paged["block_tables"],

@@ -206,22 +206,49 @@ class Model:
         return (not cfg.is_encdec and cfg.frontend == "none"
                 and all(m == "attn" for m, _ in layer_plan(cfg, "dec")))
 
-    def init_paged_pools(self, num_pages, page_size):
+    def init_paged_pools(self, num_pages, page_size, kv_bits=16,
+                         max_seqs=None):
         """Global K/V page pools, nested like the decode cache's ``layers``
-        subtree: leaves (n_periods, num_pages, page_size, KV, head_dim).
-        Page 0 is the allocator's reserved scratch page (pad-row writes)."""
+        subtree. Page 0 is the allocator's reserved scratch page (pad-row
+        writes).
+
+        ``kv_bits=16`` (native): leaves (n_periods, num_pages, page_size,
+        KV, head_dim) in ``cfg.dtype``. ``kv_bits=8|4``: the dual-pool
+        layout of DESIGN.md Sec. 15 — packed ``k_codes/v_codes`` +
+        per-page ``k_scales/v_scales`` codebooks for committed pages, and
+        full-precision ``k_hot/v_hot`` partial-page rows, one per engine
+        slot (+ scratch row 0), sized by ``max_seqs``.
+        """
         cfg = self.cfg
         assert self.supports_paged(), f"{cfg.name}: not a paged-servable arch"
         p = n_periods(cfg, "dec")
         kv, hd = cfg.n_kv_heads, cfg.head_dim_
-        shape = (p, num_pages, page_size, kv, hd)
-        layers = {f"s{slot}": {"attn": {"k": jnp.zeros(shape, cfg.dtype),
-                                        "v": jnp.zeros(shape, cfg.dtype)}}
+        if kv_bits == 16:
+            shape = (p, num_pages, page_size, kv, hd)
+            layers = {f"s{slot}": {"attn": {"k": jnp.zeros(shape, cfg.dtype),
+                                            "v": jnp.zeros(shape, cfg.dtype)}}
+                      for slot, _ in enumerate(layer_plan(cfg, "dec"))}
+            return {"layers": layers}
+        from ..core.quantize import KVQuantSpec
+        if max_seqs is None:
+            raise ValueError("quantized pools need max_seqs (hot rows)")
+        spec = KVQuantSpec(kv_bits, page_size, kv, hd)
+        code_dt = jnp.uint8 if kv_bits == 4 else jnp.int8
+        codes = (p, num_pages) + spec.codes_tail
+        scales = (p, num_pages) + spec.scales_tail
+        hot = (p, int(max_seqs) + 1, page_size, kv, hd)
+        leaves = {"k_codes": jnp.zeros(codes, code_dt),
+                  "v_codes": jnp.zeros(codes, code_dt),
+                  "k_scales": jnp.zeros(scales, spec.scale_dtype),
+                  "v_scales": jnp.zeros(scales, spec.scale_dtype),
+                  "k_hot": jnp.zeros(hot, cfg.dtype),
+                  "v_hot": jnp.zeros(hot, cfg.dtype)}
+        layers = {f"s{slot}": {"attn": dict(leaves)}
                   for slot, _ in enumerate(layer_plan(cfg, "dec"))}
         return {"layers": layers}
 
     def paged_step(self, params, pools, tokens, q_pos, kv_lens, block_tables,
-                   parallel=None):
+                   parallel=None, kv_bits=16, slots=None):
         """One serving step over a packed batch with a paged KV cache.
 
         tokens: (B, T) int32 (T=1 decode, T=chunk chunked prefill); q_pos:
@@ -238,17 +265,26 @@ class Model:
         shards and head-sharded pools — inputs/logits are then replicated
         across the mesh's model axis and the layer stack issues its own
         psum/all_gather collectives (DESIGN.md Sec. 10).
+
+        ``kv_bits`` (static 16|8|4) selects the pool representation the
+        caller built with ``init_paged_pools``; ``slots`` (B,) int32 engine
+        slot ids (-1 = pad row) address the hot partial-page rows and are
+        required when ``kv_bits < 16`` (DESIGN.md Sec. 15).
         """
         cfg = self.cfg
         x = self._embed(params, jnp.maximum(tokens, 0))
         if not cfg.use_rope:
             x = x + _sinusoid(jnp.maximum(q_pos, 0),
                               cfg.d_model).astype(cfg.dtype)
+        paged = {"block_tables": block_tables, "q_pos": q_pos,
+                 "kv_lens": kv_lens, "kv_bits": int(kv_bits)}
+        if kv_bits != 16:
+            if slots is None:
+                raise ValueError("kv_bits < 16 needs the slots array")
+            paged["slots"] = jnp.asarray(slots, jnp.int32)
         x, layer_pools, _ = forward_stack(
             params["dec"], x, cfg, positions=q_pos, parallel=parallel,
-            cache=pools["layers"],
-            paged={"block_tables": block_tables, "q_pos": q_pos,
-                   "kv_lens": kv_lens})
+            cache=pools["layers"], paged=paged)
         x = rms_norm(x, params["final_norm"], cfg.norm_eps)
         last = jnp.maximum(jnp.sum((q_pos >= 0).astype(jnp.int32), 1) - 1, 0)
         hidden = jnp.take_along_axis(x, last[:, None, None], axis=1)[:, 0]
@@ -256,7 +292,7 @@ class Model:
 
     def paged_decode_horizon(self, params, pools, tokens, start_pos,
                              block_tables, n_left, eos_ids, horizon,
-                             parallel=None):
+                             parallel=None, kv_bits=16, slots=None):
         """Run ``horizon`` decode iterations as one ``lax.scan`` with greedy
         sampling *on device* (DESIGN.md Sec. 12).
 
@@ -296,7 +332,8 @@ class Model:
             kv_lens = jnp.maximum(pos, 0) + 1
             logits, pools = self.paged_step(params, pools, tok[:, None],
                                             q_pos, kv_lens, block_tables,
-                                            parallel)
+                                            parallel, kv_bits=kv_bits,
+                                            slots=slots)
             nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
             hit_eos = (eos_ids >= 0) & (nxt == eos_ids)
             valid = active

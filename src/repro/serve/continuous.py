@@ -40,6 +40,16 @@ thousand requests behind one system prompt prefill it once; the metrics
 Greedy outputs are token-identical with the cache on or off — matched
 pages hold exactly the K/V the skipped prefill would have written.
 
+``kv_bits=8|4`` (DESIGN.md Sec. 15) stores committed KV pages MSB-quantized
+(per-head block-wise group scales, the paper's codec applied to the cache):
+pages are quantized on device the moment a dispatch completes them, the one
+partial page per sequence stays full-precision in a per-slot hot row, and
+attention dequantizes fused into the page gather. A 4-bit page pool holds
+~4-6x the sequences of a bf16 pool before preemption; 8-bit is greedy
+token-identical on the smoke models, 4-bit bounded-drift. Scheduling,
+prefix caching (token-hash keyed, so matching is representation-agnostic),
+forks, preemption and supervision are unchanged.
+
 ``mesh=`` runs the whole data plane tensor-parallel (DESIGN.md Sec. 10):
 params partition along N/K/experts/vocab, the page pools by KV head, and
 every step is one ``shard_map`` dispatch with manual psum/all_gather
@@ -62,26 +72,31 @@ from .scheduler import DECODE, FINISHED, Request, Scheduler, Sequence
 # Module-level jit, model static (frozen dataclass, hashable): every engine
 # for the same model shares one compile cache, and the pools are donated so
 # the per-step cache update is in place (donation is a no-op warning on
-# backends without buffer aliasing, e.g. CPU, so it's gated).
-_DONATE = (1,) if jax.default_backend() in ("tpu", "gpu") else ()
+# backends without buffer aliasing, e.g. CPU, so it's gated). kv_bits is
+# static (16 native pools, 8|4 the dual quantized pools of DESIGN.md
+# Sec. 15); slots maps batch rows to engine slots so quantized writes hit
+# the right hot row (-1 pads land on the scratch row).
+_DONATE = (2,) if jax.default_backend() in ("tpu", "gpu") else ()
 
 
-@functools.partial(jax.jit, static_argnums=(0,), donate_argnums=_DONATE)
-def _paged_step(model, pools, params, tokens, q_pos, kv_lens, block_tables):
+@functools.partial(jax.jit, static_argnums=(0, 1), donate_argnums=_DONATE)
+def _paged_step(model, kv_bits, pools, params, tokens, q_pos, kv_lens,
+                block_tables, slots):
     return model.paged_step(params, pools, tokens, q_pos, kv_lens,
-                            block_tables)
+                            block_tables, kv_bits=kv_bits, slots=slots)
 
 
-# decode-horizon dispatch: pools is positional arg 2 here (model and the
-# static horizon precede it), hence the shifted donation index
-_DONATE_H = (2,) if jax.default_backend() in ("tpu", "gpu") else ()
+# decode-horizon dispatch: pools is positional arg 3 here (model, the
+# static horizon and kv_bits precede it), hence the shifted donation index
+_DONATE_H = (3,) if jax.default_backend() in ("tpu", "gpu") else ()
 
 
-@functools.partial(jax.jit, static_argnums=(0, 1), donate_argnums=_DONATE_H)
-def _paged_horizon_step(model, horizon, pools, params, tokens, start_pos,
-                        n_left, eos_ids, block_tables):
+@functools.partial(jax.jit, static_argnums=(0, 1, 2), donate_argnums=_DONATE_H)
+def _paged_horizon_step(model, horizon, kv_bits, pools, params, tokens,
+                        start_pos, n_left, eos_ids, block_tables, slots):
     return model.paged_decode_horizon(params, pools, tokens, start_pos,
-                                      block_tables, n_left, eos_ids, horizon)
+                                      block_tables, n_left, eos_ids, horizon,
+                                      kv_bits=kv_bits, slots=slots)
 
 
 @dataclasses.dataclass
@@ -99,6 +114,7 @@ class ContinuousEngine:
     mesh: object = None               # tensor-parallel device mesh
     prefix_cache: bool = True         # automatic cross-request prefix reuse
     decode_horizon: int = 1           # fused decode steps per dispatch
+    kv_bits: int = 16                 # committed-page precision: 16 | 8 | 4
     max_waiting: Optional[int] = None  # backpressure: bound on waiting queue
     faults: object = None             # FaultPlan (testing); None = NO_FAULTS
 
@@ -118,6 +134,10 @@ class ContinuousEngine:
         if self.decode_horizon < 1:
             raise ValueError(f"decode_horizon must be >= 1, "
                              f"got {self.decode_horizon}")
+        self.kv_bits = int(self.kv_bits)
+        if self.kv_bits not in (16, 8, 4):
+            raise ValueError(f"kv_bits must be 16, 8 or 4, "
+                             f"got {self.kv_bits}")
         if self.faults is None:
             from .faults import NO_FAULTS
             self.faults = NO_FAULTS
@@ -127,7 +147,8 @@ class ContinuousEngine:
         self.cache = PagedKVCache(
             self.model, num_pages=self.num_pages, page_size=self.page_size,
             max_seqs=self.max_batch, max_pages_per_seq=mpps,
-            prefix_cache=self.prefix_cache, faults=self.faults)
+            prefix_cache=self.prefix_cache, faults=self.faults,
+            kv_bits=self.kv_bits)
         self.scheduler = Scheduler(self.cache, self.max_batch,
                                    self.prefill_chunk,
                                    decode_horizon=self.decode_horizon,
@@ -135,18 +156,22 @@ class ContinuousEngine:
         if self.mesh is not None:
             self._init_tensor_parallel()
         elif self.parallel is None:
-            self._step_fn = functools.partial(_paged_step, self.model)
+            self._step_fn = functools.partial(_paged_step, self.model,
+                                              self.kv_bits)
             self._horizon_fn = functools.partial(
-                _paged_horizon_step, self.model, self.decode_horizon)
+                _paged_horizon_step, self.model, self.decode_horizon,
+                self.kv_bits)
         else:                              # parallel objects aren't hashable
             self._step_fn = jax.jit(
-                lambda pools, p, toks, qpos, kvl, bt: self.model.paged_step(
-                    p, pools, toks, qpos, kvl, bt, self.parallel))
+                lambda pools, p, toks, qpos, kvl, bt, sl:
+                self.model.paged_step(
+                    p, pools, toks, qpos, kvl, bt, self.parallel,
+                    kv_bits=self.kv_bits, slots=sl))
             self._horizon_fn = jax.jit(
-                lambda pools, p, toks, sp, nl, eos, bt:
+                lambda pools, p, toks, sp, nl, eos, bt, sl:
                 self.model.paged_decode_horizon(
                     p, pools, toks, sp, bt, nl, eos, self.decode_horizon,
-                    self.parallel))
+                    self.parallel, kv_bits=self.kv_bits, slots=sl))
         self._next_id = 0
         self._seqs: Dict[int, Sequence] = {}
         self._finished: Dict[int, np.ndarray] = {}
@@ -190,19 +215,35 @@ class ContinuousEngine:
                                    pspecs))
         heads_ok = (tp.size > 1 and cfg.n_heads % tp.size == 0
                     and cfg.n_kv_heads % tp.size == 0)
-        # pool leaves: (n_periods, num_pages, page_size, KV, head_dim)
-        pool_spec = (P(None, None, None, tp.axis, None) if heads_ok else P())
-        self.cache.pools = jax.device_put(
-            self.cache.pools, NamedSharding(self.mesh, pool_spec))
-        model, rep = self.model, P()
 
-        def local_step(pools, params, tokens, q_pos, kv_lens, bt):
+        # per-leaf pool specs: groups never cross heads in the KV codec, so
+        # every pool representation shards cleanly along its KV-head dim —
+        # native k/v and quantized codes/hot rows carry it at axis 3
+        # (n_periods, pages|rows, page_size, KV, hd), the per-page scale
+        # codebooks at axis 2 (n_periods, pages, KV, n_blocks, G)
+        def leaf_spec(path, leaf):
+            if not heads_ok:
+                return P()
+            name = str(getattr(path[-1], "key", ""))
+            if name.endswith("_scales"):
+                return P(None, None, tp.axis, None, None)
+            return P(None, None, None, tp.axis, None)
+
+        pool_spec = jax.tree_util.tree_map_with_path(leaf_spec,
+                                                     self.cache.pools)
+        self.cache.pools = jax.tree_util.tree_map(
+            lambda leaf, s: jax.device_put(leaf, NamedSharding(self.mesh, s)),
+            self.cache.pools, pool_spec)
+        model, rep, kv_bits = self.model, P(), self.kv_bits
+
+        def local_step(pools, params, tokens, q_pos, kv_lens, bt, slots):
             return model.paged_step(tp_localize(params), pools, tokens,
-                                    q_pos, kv_lens, bt, parallel=tp)
+                                    q_pos, kv_lens, bt, parallel=tp,
+                                    kv_bits=kv_bits, slots=slots)
 
         fn = shard_map_compat(
             local_step, self.mesh,
-            in_specs=(pool_spec, pspecs, rep, rep, rep, rep),
+            in_specs=(pool_spec, pspecs, rep, rep, rep, rep, rep),
             out_specs=(rep, pool_spec))
         donate = (0,) if jax.default_backend() in ("tpu", "gpu") else ()
         self._step_fn = jax.jit(fn, donate_argnums=donate)
@@ -211,14 +252,15 @@ class ContinuousEngine:
         # fused iterations (collectives included) are still one dispatch
         horizon = self.decode_horizon
 
-        def local_horizon(pools, params, tokens, start_pos, n_left, eos, bt):
+        def local_horizon(pools, params, tokens, start_pos, n_left, eos, bt,
+                          slots):
             return model.paged_decode_horizon(
                 tp_localize(params), pools, tokens, start_pos, bt, n_left,
-                eos, horizon, parallel=tp)
+                eos, horizon, parallel=tp, kv_bits=kv_bits, slots=slots)
 
         hfn = shard_map_compat(
             local_horizon, self.mesh,
-            in_specs=(pool_spec, pspecs, rep, rep, rep, rep, rep),
+            in_specs=(pool_spec, pspecs, rep, rep, rep, rep, rep, rep),
             out_specs=(rep, rep, pool_spec))
         self._horizon_fn = jax.jit(hfn, donate_argnums=donate)
 
@@ -540,7 +582,7 @@ class ContinuousEngine:
         out_tok, valid, self.cache.pools = self._horizon_fn(
             self.cache.pools, self.params, jnp.asarray(tokens),
             jnp.asarray(start_pos), jnp.asarray(n_left), jnp.asarray(eos),
-            bt)
+            bt, jnp.asarray(np.asarray(slots, np.int32)))
         out_tok, valid = np.asarray(out_tok), np.asarray(valid)
         self.n_host_syncs += 1
         if self.faults.armed:
@@ -566,7 +608,8 @@ class ContinuousEngine:
         bt = self.cache.table_rows(slots)
         logits, self.cache.pools = self._step_fn(
             self.cache.pools, self.params, jnp.asarray(tokens),
-            jnp.asarray(q_pos), jnp.asarray(kv_lens), bt)
+            jnp.asarray(q_pos), jnp.asarray(kv_lens), bt,
+            jnp.asarray(np.asarray(slots, np.int32)))
         self.n_host_syncs += 1          # blocking (B, vocab) logits fetch
         return np.asarray(logits)
 

@@ -93,9 +93,12 @@ class PagedKVCache:
     """
 
     def __init__(self, model, *, num_pages, page_size, max_seqs,
-                 max_pages_per_seq=None, prefix_cache=False, faults=None):
+                 max_pages_per_seq=None, prefix_cache=False, faults=None,
+                 kv_bits=16):
         if num_pages < 2:
             raise ValueError("need >= 2 pages (page 0 is reserved scratch)")
+        if kv_bits not in (16, 8, 4):
+            raise ValueError(f"kv_bits must be 16, 8 or 4, got {kv_bits}")
         if faults is None:
             from .faults import NO_FAULTS
             faults = NO_FAULTS
@@ -105,7 +108,16 @@ class PagedKVCache:
         self.max_seqs = int(max_seqs)
         self.max_pages_per_seq = int(max_pages_per_seq or num_pages - 1)
         self.prefix_cache = bool(prefix_cache)
-        self.pools = model.init_paged_pools(num_pages, page_size)
+        self.kv_bits = int(kv_bits)
+        self.pools = model.init_paged_pools(num_pages, page_size,
+                                            kv_bits=self.kv_bits,
+                                            max_seqs=max_seqs)
+        # quantization frontier: full pages of each slot whose content is
+        # committed into the packed code/scale pools (kv_bits < 16). The
+        # device quantizes every page completed by a dispatch, so after the
+        # host commit this must equal seq_lens // page_size — "no committed
+        # page left unquantized" (check_invariants enforces it).
+        self._quant_frontier = np.zeros((max_seqs,), np.int64)
         # host metadata
         self.block_tables = np.zeros((max_seqs, self.max_pages_per_seq),
                                      np.int32)
@@ -136,6 +148,7 @@ class PagedKVCache:
                                Tuple[Tuple[int, ...], jnp.ndarray]] = {}
         donate = (0,) if jax.default_backend() in ("tpu", "gpu") else ()
         self._copy_page = jax.jit(self._copy_page_impl, donate_argnums=donate)
+        self._copy_hot = jax.jit(self._copy_hot_impl, donate_argnums=donate)
 
     # -- capacity ----------------------------------------------------------
     @property
@@ -188,6 +201,7 @@ class PagedKVCache:
         self.seq_lens[slot] = 0
         self.block_tables[slot] = 0
         self._slot_digests[slot] = []
+        self._quant_frontier[slot] = 0
         self._versions[slot] += 1
         return slot
 
@@ -212,6 +226,7 @@ class PagedKVCache:
         self.seq_lens[slot] = 0
         self.block_tables[slot] = 0
         self._slot_digests[slot] = []
+        self._quant_frontier[slot] = 0
         self._versions[slot] += 1
         self._free_slots.append(slot)
 
@@ -281,6 +296,9 @@ class PagedKVCache:
                 f"{len(self.seq_pages[slot])} pages reserved "
                 f"({len(self.seq_pages[slot]) * self.page_size} tokens)")
         self.seq_lens[slot] = n_tokens
+        # the dispatch that wrote these tokens also quantized every page it
+        # completed (quantize-on-commit), so the frontier rides the commit
+        self._quant_frontier[slot] = int(n_tokens) // self.page_size
 
     # -- prefix registry ---------------------------------------------------
     def register_prefix(self, slot, tokens):
@@ -350,6 +368,9 @@ class PagedKVCache:
             self.seq_pages[slot].append(page)
         self._slot_digests[slot] = list(match.digests)
         self.seq_lens[slot] = match.n_tokens
+        # adopted pages are committed full pages: under kv_bits < 16 their
+        # content already lives quantized in the packed pools
+        self._quant_frontier[slot] = match.n_tokens // self.page_size
         self._versions[slot] += 1
 
     # -- prefix sharing ----------------------------------------------------
@@ -379,13 +400,22 @@ class PagedKVCache:
                 self.ref_counts[page] += 1
                 self.block_tables[dst, n_full] = page
                 self.seq_pages[dst].append(page)
-                src_page = self.seq_pages[src_slot][n_full]
-                self.pools = self._copy_page(self.pools, src_page, page)
+                if self.kv_bits == 16:
+                    src_page = self.seq_pages[src_slot][n_full]
+                    self.pools = self._copy_page(self.pools, src_page, page)
+                else:
+                    # quantized pools keep the partial page full-precision in
+                    # the per-slot hot row; the packed page just allocated is
+                    # address space for the eventual quantize-on-commit. Copy
+                    # the hot row (src slot+1 -> dst slot+1) instead.
+                    self.pools = self._copy_hot(self.pools, src_slot + 1,
+                                                dst + 1)
         except Exception:
             self.release(dst)
             raise
         self.seq_lens[dst] = n
         self._slot_digests[dst] = self._slot_digests[src_slot][:n_full]
+        self._quant_frontier[dst] = n // self.page_size
         self._versions[dst] += 1
         return dst
 
@@ -395,6 +425,16 @@ class PagedKVCache:
             # leaves: (n_periods, num_pages, page_size, KV, hd)
             return leaf.at[:, dst].set(leaf[:, src])
         return jax.tree_util.tree_map(cp, pools)
+
+    @staticmethod
+    def _copy_hot_impl(pools, src_row, dst_row):
+        def cp(path, leaf):
+            # hot leaves: (n_periods, max_seqs + 1, page_size, KV, hd);
+            # code/scale pools are page-indexed, not slot-indexed — untouched
+            if str(getattr(path[-1], "key", "")).endswith("_hot"):
+                return leaf.at[:, dst_row].set(leaf[:, src_row])
+            return leaf
+        return jax.tree_util.tree_map_with_path(cp, pools)
 
     # -- packed-batch views -------------------------------------------------
     def table_rows(self, slots):
@@ -436,7 +476,10 @@ class PagedKVCache:
         committed lengths fit inside reserved leases; the registry and its
         page->digest inverse are a bijection and the LRU is a subset of the
         registered refcount-0 pages; free slots are duplicate-free with
-        fully cleared state.
+        fully cleared state. Under ``kv_bits < 16`` additionally: every live
+        slot's quantization frontier equals its committed full-page count
+        (no committed page left unquantized, none quantized ahead of
+        commit) and fits its lease; free slots sit at frontier 0.
 
         ``expect_idle=True`` additionally requires no live sequence at all
         — every slot free and every usable page free or LRU-reclaimable,
@@ -457,6 +500,9 @@ class PagedKVCache:
                 fail(f"free slot {s} still holds state: "
                      f"pages={self.seq_pages[s]}, "
                      f"len={int(self.seq_lens[s])}")
+            if self._quant_frontier[s] != 0:
+                fail(f"free slot {s} has nonzero quant frontier "
+                     f"{int(self._quant_frontier[s])}")
         # refcount reconstruction from live block tables (+ scratch pin)
         expected = np.zeros((self.num_pages,), np.int64)
         expected[0] = 1
@@ -480,6 +526,21 @@ class PagedKVCache:
             if len(self._slot_digests[s]) > len(pages):
                 fail(f"slot {s}: {len(self._slot_digests[s])} chain digests "
                      f"for {len(pages)} pages")
+            if self.kv_bits < 16:
+                fr = int(self._quant_frontier[s])
+                want = int(self.seq_lens[s]) // self.page_size
+                if fr < want:
+                    fail(f"slot {s}: committed pages left unquantized — "
+                         f"quant frontier {fr} behind "
+                         f"{want} committed full pages (kv_bits="
+                         f"{self.kv_bits})")
+                if fr > want:
+                    fail(f"slot {s}: quant frontier {fr} ahead of "
+                         f"{want} committed full pages — pages marked "
+                         "quantized that were never committed")
+                if fr > len(pages):
+                    fail(f"slot {s}: quant frontier {fr} exceeds its lease "
+                         f"of {len(pages)} pages")
         mism = [p for p in range(self.num_pages)
                 if int(self.ref_counts[p]) != int(expected[p])]
         if mism:

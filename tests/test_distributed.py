@@ -20,6 +20,7 @@ def make_mesh(shape=(4, 2), axes=("data", "model")):
                          axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
 
 
+@pytest.mark.requires_env("axis_type")
 def test_resolver_rules():
     ctx = from_mesh(make_mesh())
     # divisible dims get sharded
@@ -39,6 +40,7 @@ def test_resolver_rules():
 
 @pytest.mark.parametrize("arch", ["qwen1.5-0.5b", "granite-moe-3b-a800m",
                                   "jamba-v0.1-52b"])
+@pytest.mark.requires_env("axis_type")
 def test_sharded_loss_matches_single_device(arch):
     """The distributed forward is numerically the single-device forward."""
     cfg = smoke_config(arch)
@@ -67,6 +69,7 @@ def test_sharded_loss_matches_single_device(arch):
     assert float(loss_8) == pytest.approx(float(loss_1), rel=tol)
 
 
+@pytest.mark.requires_env("axis_type")
 def test_moe_ep_matches_local(rng):
     """shard_map all-to-all EP == single-device dispatch (same capacity)."""
     cfg = dataclasses.replace(smoke_config("granite-moe-3b-a800m"),
@@ -94,6 +97,7 @@ def test_moe_ep_matches_local(rng):
                                atol=5e-4, rtol=5e-3)
 
 
+@pytest.mark.requires_env("axis_type")
 def test_sharded_train_step_runs(rng):
     cfg = smoke_config("internlm2-1.8b")
     model = Model(cfg)
@@ -138,6 +142,7 @@ def test_compression_error_feedback(rng):
     assert q.dtype == jnp.int8
 
 
+@pytest.mark.requires_env("axis_type")
 def test_psum_compressed_under_shard_map(rng):
     from repro.train.compression import psum_compressed
     mesh = make_mesh((8,), ("data",))

@@ -1,0 +1,492 @@
+"""MSB-quantized paged KV cache (DESIGN.md Sec. 15).
+
+Four layers of coverage:
+  * token fidelity: greedy serving outputs across ``kv_bits`` 16/8/4 x
+    ``execution`` simulated/packed x ``decode_horizon`` 1/8 x TP 1/2,
+    plus prefix-cache adoption, ``fork_request`` and mid-horizon page
+    boundaries. 8-bit is token-identical to the bf16 cache on the smoke
+    workload; 4-bit is exact until the first page commits, deterministic
+    across horizons/modes after, with bounded logit drift.
+  * codec properties: round-trip shape/dtype stability, 4-bit scale
+    monotonicity, exactness on small alphabets, determinism — asserted on
+    fixed seeds here and fuzzed under hypothesis when it is installed.
+  * the fused-dequant Pallas kernel against its jnp oracle (interpret
+    mode, mixed partial/full sequences).
+  * dual-pool allocator invariants: the quantization frontier tracks
+    commits, corruptions are detected (negative tests), prefix digests
+    are bit-exact across kv_bits, and a chaos run (tight pool, forks,
+    aborts, preemption) audits clean.
+"""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import smoke_config
+from repro.core import (KVQuantSpec, QuantPolicy, kv_dequantize_pages,
+                        kv_native_page_bytes, kv_quantize_pages,
+                        quantize_params)
+from repro.models import Model
+from repro.serve import ContinuousEngine
+from repro.serve.paged_cache import PageStateError
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = smoke_config("internlm2-1.8b")
+    cfg = dataclasses.replace(cfg, vocab_size=64, vocab_round=64)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    params = jax.tree_util.tree_map(lambda p: p.astype(jnp.float32), params)
+    return model, params
+
+
+@pytest.fixture(scope="module")
+def qsetup(setup):
+    model, params = setup
+    qparams, report = quantize_params(params, QuantPolicy(
+        bits=4, block=64, solver="dp", min_size=1024))
+    assert report
+    return model, qparams
+
+
+def _requests(n=6, seed=5):
+    rng = np.random.default_rng(seed)
+    return [(rng.integers(0, 64, (int(rng.integers(3, 14)),))
+             .astype(np.int32), int(rng.integers(2, 10)))
+            for _ in range(n)]
+
+
+def _serve(model, params, reqs, **kw):
+    opts = dict(max_batch=4, page_size=4, num_pages=64, max_seq=32,
+                prefill_chunk=6, prefix_cache=False)
+    opts.update(kw)
+    eng = ContinuousEngine(model, params, **opts)
+    rids = [eng.submit(*r) for r in reqs]
+    outs = eng.run()
+    eng.cache.check_invariants()
+    eng.close()
+    return eng, [outs[r].tolist() for r in rids]
+
+
+# ---------------------------------------------------------------------------
+# token fidelity
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def ref16(setup):
+    model, params = setup
+    return _serve(model, params, _requests())[1]
+
+
+@pytest.mark.parametrize("horizon", [1, 8])
+def test_kv8_token_identical(setup, ref16, horizon):
+    """8-bit cache: greedy output == bf16 cache, at both decode horizons
+    (horizon=8 crosses page boundaries mid-dispatch at page_size=4)."""
+    model, params = setup
+    _, outs = _serve(model, params, _requests(), kv_bits=8,
+                     decode_horizon=horizon)
+    assert outs == ref16
+
+
+@pytest.mark.parametrize("execution", ["simulated", "packed"])
+@pytest.mark.parametrize("kv_bits", [8, 4])
+def test_execution_modes_identical(qsetup, execution, kv_bits):
+    """Quantized-cache decoding is execution-mode-invariant: the packed
+    weight path and its simulation produce the same greedy tokens over
+    the same quantized pools (the cache codec is orthogonal to the weight
+    representation)."""
+    model, qparams = qsetup
+    _, outs = _serve(model, qparams, _requests(), kv_bits=kv_bits,
+                     execution=execution)
+    _, sim = _serve(model, qparams, _requests(), kv_bits=kv_bits,
+                    execution="simulated")
+    assert outs == sim
+
+
+def test_kv4_deterministic_across_horizons(setup):
+    """4-bit drifts from bf16 after pages commit, but the drift is a pure
+    function of the cache content: horizons 1 and 8 agree token-for-token,
+    and a repeat run is bit-identical (no hidden nondeterminism)."""
+    model, params = setup
+    _, h1 = _serve(model, params, _requests(), kv_bits=4, decode_horizon=1)
+    _, h8 = _serve(model, params, _requests(), kv_bits=4, decode_horizon=8)
+    _, h1b = _serve(model, params, _requests(), kv_bits=4, decode_horizon=1)
+    assert h1 == h8 == h1b
+
+
+def test_kv4_exact_before_any_commit(setup, ref16):
+    """Until a sequence fills its first page nothing is quantized (the hot
+    row stays full precision), so with page_size=16 a workload capped at
+    12 positions per request never commits a page and the 4-bit engine is
+    token-identical to bf16 — exactness-before-commit, by construction."""
+    model, params = setup
+    reqs = [(p[:6], min(n, 6)) for p, n in _requests()]   # <= 12 positions
+    _, o16 = _serve(model, params, reqs, page_size=16, num_pages=16,
+                    kv_bits=16)
+    _, o4 = _serve(model, params, reqs, page_size=16, num_pages=16,
+                   kv_bits=4)
+    assert o4 == o16
+
+
+def test_kv4_bounded_logit_drift(setup):
+    """After committing two full pages the 4-bit logits stay within a
+    small bound of the bf16-cache logits on the real vocab (padded rows
+    are -inf on both sides and excluded)."""
+    model, params = setup
+    rng = np.random.default_rng(9)
+    toks = rng.integers(0, 64, (1, 8)).astype(np.int32)
+    q_pos = np.arange(8, dtype=np.int32)[None]
+    bt = np.array([[1, 2, 3]], np.int32)
+    lens = np.array([8], np.int32)
+    slots = np.array([0], np.int32)
+    outs = {}
+    for bits in (16, 4):
+        pools = model.init_paged_pools(4, 4, kv_bits=bits, max_seqs=2)
+        logits, pools = model.paged_step(
+            params, pools, jnp.asarray(toks), jnp.asarray(q_pos),
+            jnp.asarray(lens), jnp.asarray(bt), kv_bits=bits,
+            slots=jnp.asarray(slots))
+        # one decode step on top: reads the two committed (quantized) pages
+        logits2, _ = model.paged_step(
+            params, pools, jnp.asarray([[7]], np.int32),
+            jnp.asarray([[8]], np.int32), jnp.asarray([9], np.int32),
+            jnp.asarray(bt), kv_bits=bits, slots=jnp.asarray(slots))
+        outs[bits] = np.asarray(logits2)[0, :64]          # real vocab only
+    diff = np.max(np.abs(outs[4] - outs[16]))
+    assert np.isfinite(diff)
+    assert diff < 0.5, f"4-bit logit drift {diff} exceeds bound"
+
+
+def test_prefix_adoption_identity(setup):
+    """A request admitted through the prefix registry (pages adopted by
+    refcount, prefill skipped) decodes the same tokens as the request that
+    populated it — at every kv_bits (digests hash tokens, not codes)."""
+    model, params = setup
+    prompt = np.random.default_rng(7).integers(0, 64, (11,)).astype(np.int32)
+    for bits in (16, 8, 4):
+        eng = ContinuousEngine(model, params, max_batch=4, page_size=4,
+                               num_pages=64, max_seq=32, prefill_chunk=6,
+                               kv_bits=bits, prefix_cache=True)
+        a = eng.submit(prompt, 6)
+        o1 = eng.run()
+        b = eng.submit(prompt, 6)
+        o2 = eng.run()
+        assert eng.n_prefix_hits >= 1
+        assert o1[a].tolist() == o2[b].tolist()
+        eng.cache.check_invariants()
+        eng.close()
+
+
+def test_fork_identity(setup):
+    """fork_request on quantized pools: children share committed (packed)
+    pages by refcount and copy the parent's hot row; under greedy decoding
+    every child reproduces the parent's own continuation — token-identical
+    to the bf16-cache fork at 8-bit, deterministic at 4-bit."""
+    model, params = setup
+    prompt = np.random.default_rng(3).integers(0, 64, (11,)).astype(np.int32)
+
+    def fork_run(bits):
+        eng = ContinuousEngine(model, params, max_batch=4, page_size=4,
+                               num_pages=64, max_seq=40, prefill_chunk=6,
+                               kv_bits=bits)
+        rid = eng.submit(prompt, 8)
+        for _ in range(4):
+            eng.step()
+        kids = eng.fork_request(rid, n=2)
+        assert eng.n_forks == 2            # shared pages, not resubmission
+        outs = eng.run()
+        eng.cache.check_invariants()
+        eng.close()
+        return [outs[r].tolist() for r in [rid] + kids]
+
+    r16 = fork_run(16)
+    r8 = fork_run(8)
+    assert r8 == r16
+    r4 = fork_run(4)
+    # representation-independent structure, asserted at every width: the
+    # children are deterministic twins, and each child's head replays the
+    # parent's own continuation from the fork point (committed shared
+    # pages + the copied hot row are coherent)
+    for parent, c1, c2 in (r16, r8, r4):
+        assert c1 == c2
+        g = next(i for i in range(len(parent) + 1)
+                 if c1[:len(parent) - i] == parent[i:])
+        assert g <= 4, f"children do not extend the parent: {parent} {c1}"
+
+
+def test_tp2_token_identity(setup):
+    """Head-sharded quantized pools (codes/hot along axis 3, scales along
+    axis 2): tp=2 greedy output == tp=1 at both quantized widths, with the
+    decode-horizon scan inside the shard_map body."""
+    if len(jax.devices()) < 2:
+        pytest.skip("needs 2 devices (XLA_FLAGS="
+                    "--xla_force_host_platform_device_count=2)")
+    from repro.launch.mesh import make_tp_mesh
+    model, params = setup
+    mesh = make_tp_mesh(2)
+    for bits in (8, 4):
+        _, tp1 = _serve(model, params, _requests(4), kv_bits=bits)
+        _, tp2 = _serve(model, params, _requests(4), kv_bits=bits, mesh=mesh)
+        _, tp2h = _serve(model, params, _requests(4), kv_bits=bits,
+                         mesh=mesh, decode_horizon=4)
+        assert tp2 == tp1
+        assert tp2h == tp1
+
+
+# ---------------------------------------------------------------------------
+# codec properties (fixed-seed; hypothesis fuzzing below when installed)
+# ---------------------------------------------------------------------------
+
+def _check_roundtrip_static(x, bits):
+    spec = KVQuantSpec(bits, x.shape[-3], x.shape[-2], x.shape[-1])
+    codes, scales = kv_quantize_pages(jnp.asarray(x), bits)
+    assert codes.shape == x.shape[:-3] + spec.codes_tail
+    assert scales.shape == x.shape[:-3] + spec.scales_tail
+    assert codes.dtype == (jnp.uint8 if bits == 4 else jnp.int8)
+    assert scales.dtype == spec.scale_dtype
+    out = kv_dequantize_pages(codes, scales, bits, x.dtype)
+    assert out.shape == x.shape and out.dtype == x.dtype
+    # determinism: a second call is bitwise identical
+    c2, s2 = kv_quantize_pages(jnp.asarray(x), bits)
+    np.testing.assert_array_equal(np.asarray(codes), np.asarray(c2))
+    np.testing.assert_array_equal(np.asarray(scales), np.asarray(s2))
+    return np.asarray(out, np.float32)
+
+
+@pytest.mark.parametrize("bits", [8, 4])
+def test_roundtrip_shape_dtype_deterministic(rng, bits):
+    x = rng.standard_normal((3, 8, 2, 16)).astype(np.float32)
+    out = _check_roundtrip_static(x, bits)
+    err = np.max(np.abs(out - x))
+    assert err < (0.05 if bits == 8 else 1.5) * np.max(np.abs(x))
+
+
+def test_scales_monotone_4bit(rng):
+    """The 4-bit per-group codebook rows are sorted ascending (DP group
+    means over sorted magnitudes) — the property the kernel's
+    take_along_axis dequant relies on being stable."""
+    x = rng.standard_normal((5, 8, 2, 16)).astype(np.float32)
+    _, scales = kv_quantize_pages(jnp.asarray(x), 4)
+    s = np.asarray(scales, np.float32)
+    assert np.all(np.diff(s, axis=-1) >= 0)
+    assert np.all(s >= 0)
+
+
+def test_exact_on_small_alphabet_4bit(rng):
+    """Pages whose per-group magnitudes take <= 8 distinct bf16 values
+    round-trip exactly: the DP solver puts each magnitude in its own
+    group, the group mean is the magnitude itself, and the sign rides the
+    MSB."""
+    alphabet = np.asarray([0.0, 0.25, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0],
+                          np.float32)              # bf16-exact values
+    mags = alphabet[rng.integers(0, 8, (2, 8, 2, 16))]
+    signs = np.where(rng.standard_normal((2, 8, 2, 16)) < 0, -1.0, 1.0)
+    x = (mags * signs).astype(np.float32)
+    codes, scales = kv_quantize_pages(jnp.asarray(x), 4)
+    out = np.asarray(kv_dequantize_pages(codes, scales, 4, jnp.float32))
+    np.testing.assert_array_equal(out, x)
+
+
+def test_8bit_exact_at_absmax_and_zero(rng):
+    """Sign-magnitude absmax codes are exact at 0 and +-absmax."""
+    x = np.zeros((1, 8, 2, 16), np.float32)
+    x[0, 0, 0, 0] = 3.5
+    x[0, 3, 1, 5] = -3.5
+    codes, scales = kv_quantize_pages(jnp.asarray(x), 8)
+    out = np.asarray(kv_dequantize_pages(codes, scales, 8, jnp.float32))
+    np.testing.assert_array_equal(out, x)
+
+
+def test_page_bytes_accounting():
+    """KVQuantSpec.page_bytes vs the native pool: the storage ratios the
+    serve_bench capacity axis banks on."""
+    native = kv_native_page_bytes(16, 2, 16, jnp.float32)
+    s4 = KVQuantSpec(4, 16, 2, 16)
+    s8 = KVQuantSpec(8, 16, 2, 16)
+    assert native == 2048
+    assert s4.page_bytes() < s8.page_bytes() < native
+    assert native / s4.page_bytes() > 4          # >4x pages per byte
+    assert native / s8.page_bytes() > 3
+
+
+# -- hypothesis fuzzing (skips cleanly when hypothesis is not installed) ----
+
+def test_property_roundtrip_fuzz():
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    @hyp.given(st.integers(0, 2 ** 32 - 1), st.sampled_from([4, 8]),
+               st.sampled_from([(4, 2, 8), (8, 2, 16), (16, 1, 32)]))
+    @hyp.settings(max_examples=25, deadline=None)
+    def run(seed, bits, shape):
+        x = (np.random.default_rng(seed)
+             .standard_normal((2,) + shape).astype(np.float32))
+        _check_roundtrip_static(x, bits)
+        if bits == 4:
+            _, scales = kv_quantize_pages(jnp.asarray(x), 4)
+            assert np.all(np.diff(np.asarray(scales, np.float32),
+                                  axis=-1) >= 0)
+
+    run()
+
+
+def test_property_small_alphabet_fuzz():
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    @hyp.given(st.integers(0, 2 ** 32 - 1), st.integers(1, 8))
+    @hyp.settings(max_examples=25, deadline=None)
+    def run(seed, n_mags):
+        rng = np.random.default_rng(seed)
+        # n_mags distinct bf16-exact magnitudes (powers of two stay exact)
+        alphabet = np.float32(2.0) ** rng.choice(
+            np.arange(-4, 4), size=n_mags, replace=False)
+        mags = alphabet[rng.integers(0, n_mags, (1, 8, 2, 16))]
+        signs = np.where(rng.standard_normal((1, 8, 2, 16)) < 0, -1, 1)
+        x = (mags * signs).astype(np.float32)
+        codes, scales = kv_quantize_pages(jnp.asarray(x), 4)
+        out = np.asarray(kv_dequantize_pages(codes, scales, 4, jnp.float32))
+        np.testing.assert_array_equal(out, x)
+
+    run()
+
+
+# ---------------------------------------------------------------------------
+# fused-dequant kernel vs oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bits", [8, 4])
+def test_quant_kernel_matches_oracle(rng, bits):
+    """Pallas fused-dequant decode kernel (interpret mode) == the jnp
+    gather+dequant oracle, over mixed partial/full sequences with hot-row
+    overlays."""
+    from repro.kernels.paged_attention import (
+        paged_attention_decode_quant, paged_attention_decode_quant_ref)
+    b, h, kv, d, ps, mp = 3, 4, 2, 16, 4, 4
+    n_pages, n_hot = 1 + b * mp, b + 1
+    q = jnp.asarray(rng.standard_normal((b, h, d)), jnp.float32)
+    kfull = rng.standard_normal((n_pages, ps, kv, d)).astype(np.float32)
+    vfull = rng.standard_normal((n_pages, ps, kv, d)).astype(np.float32)
+    k_codes, k_scales = kv_quantize_pages(jnp.asarray(kfull), bits)
+    v_codes, v_scales = kv_quantize_pages(jnp.asarray(vfull), bits)
+    k_hot = jnp.asarray(rng.standard_normal((n_hot, ps, kv, d)), jnp.float32)
+    v_hot = jnp.asarray(rng.standard_normal((n_hot, ps, kv, d)), jnp.float32)
+    bt = jnp.asarray(1 + np.arange(b * mp).reshape(b, mp), jnp.int32)
+    lens = jnp.asarray([6, 8, 13], jnp.int32)     # partial, full, partial
+    hot_rows = jnp.asarray([1, 2, 3], jnp.int32)
+    args = (q, k_codes, k_scales, v_codes, v_scales, k_hot, v_hot, bt,
+            lens, hot_rows)
+    ref = paged_attention_decode_quant_ref(*args, kv_bits=bits)
+    out = paged_attention_decode_quant(*args, kv_bits=bits, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# dual-pool allocator invariants
+# ---------------------------------------------------------------------------
+
+def _live_engine(setup, bits, n_steps=6):
+    model, params = setup
+    eng = ContinuousEngine(model, params, max_batch=4, page_size=4,
+                           num_pages=64, max_seq=32, prefill_chunk=6,
+                           kv_bits=bits, prefix_cache=False)
+    for p, n in _requests(3):
+        eng.submit(p, n)
+    for _ in range(n_steps):
+        eng.step()
+    return eng
+
+
+def test_frontier_tracks_commits(setup):
+    eng = _live_engine(setup, 4)
+    cache = eng.cache
+    live = [s for s in range(cache.max_seqs) if s not in cache._free_slots]
+    assert live
+    for s in live:
+        assert int(cache._quant_frontier[s]) == \
+            int(cache.seq_lens[s]) // cache.page_size
+    cache.check_invariants()
+
+
+@pytest.mark.parametrize("delta", [-1, 1])
+def test_frontier_corruption_detected(setup, delta):
+    """A frontier behind the commit = a committed page left unquantized;
+    ahead = pages marked quantized that were never committed. Both are
+    audit failures."""
+    eng = _live_engine(setup, 4)
+    cache = eng.cache
+    live = [s for s in range(cache.max_seqs)
+            if s not in cache._free_slots
+            and int(cache.seq_lens[s]) // cache.page_size + delta >= 0]
+    assert live
+    cache._quant_frontier[live[0]] += delta
+    with pytest.raises(PageStateError, match="quant"):
+        cache.check_invariants()
+
+
+def test_free_slot_frontier_detected(setup):
+    eng = _live_engine(setup, 4)
+    cache = eng.cache
+    assert cache._free_slots
+    cache._quant_frontier[cache._free_slots[0]] = 1
+    with pytest.raises(PageStateError, match="free slot"):
+        cache.check_invariants()
+
+
+def test_native_pools_skip_frontier_audit(setup):
+    """kv_bits=16 pools carry no frontier semantics: the same corruption
+    is a no-op for the audit (the field is engine bookkeeping only)."""
+    eng = _live_engine(setup, 16)
+    live = [s for s in range(eng.cache.max_seqs)
+            if s not in eng.cache._free_slots]
+    eng.cache._quant_frontier[live[0]] += 1
+    eng.cache.check_invariants()                   # no raise
+
+
+def test_prefix_digests_bit_exact_across_kv_bits(setup):
+    """The registry hashes token chains, never pool bytes: the digest set
+    a prompt registers is identical at 16/8/4 — what makes prefix matches
+    (and supervisor replay) representation-agnostic."""
+    model, params = setup
+    prompt = np.random.default_rng(4).integers(0, 64, (13,)).astype(np.int32)
+    digests = {}
+    for bits in (16, 8, 4):
+        eng = ContinuousEngine(model, params, max_batch=4, page_size=4,
+                               num_pages=64, max_seq=32, prefill_chunk=6,
+                               kv_bits=bits, prefix_cache=True)
+        eng.submit(prompt, 6)
+        eng.run()
+        digests[bits] = set(eng.cache._registry.keys())
+        assert digests[bits]
+        eng.close()
+    assert digests[16] == digests[8] == digests[4]
+
+
+def test_chaos_preemption_quantized_pool_audits_clean(setup):
+    """Tight pool at kv_bits=4: forced preemption + a fork + an abort, all
+    requests still complete, and the full invariant suite (frontier
+    included) comes back clean with an idle pool at the end."""
+    model, params = setup
+    eng = ContinuousEngine(model, params, max_batch=8, page_size=4,
+                           num_pages=13, max_seq=32, prefill_chunk=4,
+                           kv_bits=4, prefix_cache=False)
+    rng = np.random.default_rng(2)
+    # 8 concurrent sequences x 4 pages each (prompt 4 + 12 new tokens
+    # writes 15 positions) against 12 usable pages: decode growth must
+    # overlap and evict
+    reqs = [(rng.integers(0, 64, (4,)).astype(np.int32), 12)
+            for _ in range(8)]
+    rids = [eng.submit(*r) for r in reqs]
+    for _ in range(3):
+        eng.step()
+    eng.abort_request(rids[-1])
+    outs = eng.run()
+    assert eng.scheduler.n_preemptions > 0, "pool was not tight enough"
+    assert set(rids[:-1]) <= set(outs)
+    assert all(len(outs[r]) == 12 for r in rids[:-1])
+    eng.cache.check_invariants(expect_idle=True)
+    eng.close()
