@@ -66,6 +66,15 @@ MSB-quantized at ``kv_bits`` ∈ {16, 8, 4} under one fixed pool byte budget
 after forced preemption on quantized pages, and reporting the codec's
 round-trip reconstruction MSE on actually-served K/V pages.
 
+A tenth axis (``prefill_packing``) serves the same multi-prompt admission
+wave with packed ragged prefill on vs off across execution × tp ×
+decode_horizon × kv_bits (DESIGN.md Sec. 16), asserting greedy token
+identity in every cell and that packing drops prefill dispatches-per-
+prompt below 1. It also reports client-visible TTFT p50/p99 through the
+warmed HTTP front door and an MLPerf-style offline-throughput scenario
+(all samples queued at once; samples/sec and tokens/sec over the full
+drain).
+
 Emits a JSON comparison to stdout and --out (default
 artifacts/serve_bench.json); see benchmarks/README.md for the schema.
 """
@@ -712,11 +721,19 @@ def _run_kv_quant_axis(model, qparams, fparams, fast):
                            kv_bits=16, prefix_cache=False)
     for r in reqs[:4]:
         eng.submit(*r)
-    for _ in range(12):
+    # packed prefill drains the prompt backlog in ~one wave, so a fixed
+    # step count can overshoot the live window entirely; instead step
+    # until every running sequence is decoding (its prompt pages are
+    # committed with real K/V) and sample right there
+    used = []
+    while eng.scheduler.has_work:
         eng.step()
+        used = sorted({p for s in range(eng.cache.max_seqs)
+                       for p in eng.cache.seq_pages[s]})
+        run = eng.scheduler.running
+        if used and run and all(s.state == "decode" for s in run):
+            break
     k_pool = jax.tree_util.tree_leaves(eng.cache.pools)[0]   # (p, n, ps, kv, hd)
-    used = sorted({p for s in range(eng.cache.max_seqs)
-                   for p in eng.cache.seq_pages[s]})
     assert used, "mid-flight sample found no leased pages"
     real = jnp.asarray(np.asarray(k_pool)[:, used])
     power = float(jnp.sum(jnp.asarray(real, jnp.float32) ** 2))
@@ -729,6 +746,163 @@ def _run_kv_quant_axis(model, qparams, fparams, fast):
     assert q["kv8"] <= q["kv4"], q
     axis["roundtrip_rel_mse"] = q
     eng.close()
+    return axis
+
+
+def _run_prefill_packing_axis(model, qparams, fast):
+    """Packed-ragged-prefill axis (DESIGN.md Sec. 16): the same burst with
+    ``prefill_packing`` on vs off across execution mode, TP size, decode
+    horizon and KV-cache bits. Asserts, per cell: greedy token identity
+    packed-vs-unpacked (off-TPU), and with packing on that a multi-prompt
+    admission wave costs < 1 prefill dispatch per prompt — the tentpole
+    claim. Reports, on top: client-visible TTFT p50/p99 through a *warmed*
+    HTTP server (the latency a user sees once startup AOT warmup has
+    eliminated steady-state compiles) and an MLPerf-style offline
+    scenario — every sample queued before the clock starts, throughput =
+    samples/sec and tokens/sec over the full drain."""
+    import json as _json
+    import socket
+    from concurrent.futures import ThreadPoolExecutor
+
+    import jax
+
+    from repro.launch.mesh import make_tp_mesh
+    from repro.serve import APIServer, ContinuousEngine
+
+    rng = np.random.default_rng(29)
+    n_req = 6 if fast else 10
+    budget = 8 if fast else 16
+    reqs = [(rng.integers(0, 64, (int(rng.integers(4, 14)),))
+             .astype(np.int32), budget) for _ in range(n_req)]
+    base_kw = dict(max_batch=8, page_size=4, num_pages=128, max_seq=48,
+                   prefill_chunk=8, prefix_cache=False)
+
+    def serve(packing, ex, mesh, h, kvb):
+        eng = ContinuousEngine(model, qparams, execution=ex, mesh=mesh,
+                               decode_horizon=h, kv_bits=kvb,
+                               prefill_packing=packing, **base_kw)
+        rids = [eng.submit(*r) for r in reqs]
+        outs = eng.run()
+        st = eng.stats()
+        eng.close()
+        return [outs[r].tolist() for r in rids], st
+
+    n_dev = len(jax.devices())
+    axis = {"n_requests": n_req, "budget": budget, "cells": {}}
+    for tp in (1, 2):
+        if tp > n_dev:
+            continue
+        mesh = make_tp_mesh(tp) if tp > 1 else None
+        for ex in ("simulated", "packed"):
+            for h in (1, 8):
+                for kvb in (16, 8):
+                    on, st_on = serve(True, ex, mesh, h, kvb)
+                    off, st_off = serve(False, ex, mesh, h, kvb)
+                    ident = on == off
+                    dpp_on = st_on["prefill_dispatches"] / n_req
+                    dpp_off = st_off["prefill_dispatches"] / n_req
+                    cell = {
+                        "outputs_identical": bool(ident),
+                        "prefill_dispatches_packed":
+                            st_on["prefill_dispatches"],
+                        "prefill_dispatches_unpacked":
+                            st_off["prefill_dispatches"],
+                        "dispatches_per_prompt_packed": round(dpp_on, 4),
+                        "dispatches_per_prompt_unpacked": round(dpp_off, 4),
+                        "packed_segments": st_on["prefill_segments"],
+                    }
+                    if jax.default_backend() != "tpu":
+                        assert ident, (
+                            f"packed prefill changed greedy tokens "
+                            f"(ex={ex}, tp={tp}, h={h}, kv={kvb})")
+                    # the tentpole claim: a multi-prompt admission wave
+                    # packs into fewer dispatches than prompts
+                    assert dpp_on < 1.0, (ex, tp, h, kvb, cell)
+                    assert dpp_on < dpp_off, (ex, tp, h, kvb, cell)
+                    axis["cells"][f"{ex}_tp{tp}_h{h}_kv{kvb}"] = cell
+
+    # client-visible TTFT through the warmed front door: concurrent burst,
+    # one socket per request, TTFT = request written -> first token frame
+    def sse_ttft(args):
+        host, port, (prompt, max_new) = args
+        body = _json.dumps({"prompt": prompt.tolist(),
+                            "max_tokens": max_new, "stream": True}).encode()
+        t0 = time.perf_counter()
+        s = socket.create_connection((host, port), timeout=600)
+        s.sendall((f"POST /v1/completions HTTP/1.1\r\nHost: b\r\n"
+                   f"Content-Type: application/json\r\n"
+                   f"Content-Length: {len(body)}\r\n\r\n").encode() + body)
+        buf, start, ttft = b"", None, None
+        while b"data: [DONE]\n\n" not in buf:
+            chunk = s.recv(65536)
+            assert chunk, "server closed the stream early"
+            buf += chunk
+            if start is None and b"\r\n\r\n" in buf:
+                start = buf.index(b"\r\n\r\n") + 4
+            if start is not None and ttft is None and b"\n\n" in buf[start:]:
+                ttft = time.perf_counter() - t0
+        s.close()
+        return ttft
+
+    srv = APIServer(ContinuousEngine(model, qparams, decode_horizon=8,
+                                     **base_kw), warmup=True)
+    host, port = srv.serve_background()
+    try:
+        # wait out the warming window (503 + Retry-After): the axis
+        # measures the steady state startup warmup buys, not the warmup
+        deadline = time.monotonic() + 600
+        while time.monotonic() < deadline:
+            s = socket.create_connection((host, port), timeout=10)
+            s.sendall(b"GET /healthz HTTP/1.1\r\nHost: b\r\n\r\n")
+            status = s.recv(4096).split(b" ", 2)[1]
+            s.close()
+            if status == b"200":
+                break
+            time.sleep(0.1)
+        else:
+            raise TimeoutError("server never left the warming state")
+        jobs = [(host, port, r) for r in reqs]
+        ttfts = []
+        with ThreadPoolExecutor(n_req) as pool:
+            for _ in range(2 if fast else 3):
+                ttfts.extend(pool.map(sse_ttft, jobs))
+        st = srv.engine_loop.engine.stats()
+    finally:
+        srv.close()
+    ms = sorted(1e3 * t for t in ttfts)
+    axis["ttft_ms"] = {
+        "p50": round(float(np.percentile(ms, 50)), 2),
+        "p99": round(float(np.percentile(ms, 99)), 2),
+        "max": round(ms[-1], 2), "n": len(ms),
+        "warmup_seconds": round(st["warmup_seconds"], 3),
+        "warmup_traces": st["warmup_traces"],
+    }
+
+    # MLPerf-style offline scenario: the whole sample set is available
+    # before the run starts; the metric is completed samples per second
+    # over the full drain (and generated tokens/sec alongside)
+    offline = {}
+    for packing in (True, False):
+        serve(packing, "simulated", None, 8, 16)       # warm jit buckets
+        best = None
+        for _ in range(2 if fast else 3):
+            eng = ContinuousEngine(model, qparams, decode_horizon=8,
+                                   prefill_packing=packing, **base_kw)
+            for r in reqs:
+                eng.submit(*r)
+            t0 = time.perf_counter()
+            eng.run()
+            dt = time.perf_counter() - t0
+            if best is None or dt < best[0]:
+                best = (dt, eng.n_tokens_out)
+            eng.close()
+        dt, toks = best
+        offline["packed" if packing else "unpacked"] = {
+            "seconds": round(dt, 3),
+            "samples_per_s": round(n_req / dt, 2),
+            "tokens_per_s": round(toks / dt, 1),
+        }
+    axis["offline_scenario"] = offline
     return axis
 
 
@@ -856,6 +1030,19 @@ def main():
           f"({fr['replay_overhead_frac']:.1%}) | wall x{fr['wall_slowdown']} "
           f"| identical {fr['outputs_identical']} | pool clean "
           f"{fr['pool_audit_clean']}")
+
+    report["prefill_packing"] = _run_prefill_packing_axis(
+        model, qparams, args.fast)
+    pp = report["prefill_packing"]
+    dpps = [c["dispatches_per_prompt_packed"] for c in pp["cells"].values()]
+    idents = all(c["outputs_identical"] for c in pp["cells"].values())
+    print(f"[serve_bench] prefill_packing axis: {len(pp['cells'])} cells | "
+          f"dispatches/prompt packed {min(dpps)}-{max(dpps)} (< 1) | "
+          f"identical {idents} | ttft p50 {pp['ttft_ms']['p50']}ms "
+          f"p99 {pp['ttft_ms']['p99']}ms | offline "
+          f"{pp['offline_scenario']['packed']['samples_per_s']} samples/s "
+          f"packed vs "
+          f"{pp['offline_scenario']['unpacked']['samples_per_s']} unpacked")
 
     report["kv_quant"] = _run_kv_quant_axis(model, qparams, fparams,
                                             args.fast)

@@ -13,20 +13,29 @@ it in ``ContinuousEngine`` at the production decode config
     streaming responses are SSE ``data:`` frames ending in ``data: [DONE]``
   * ``GET /v1/models`` / ``GET /healthz`` / ``GET /metrics``
 
+The server starts with ``warmup=True``: the engine loop AOT-compiles the
+full reachable dispatch set (DESIGN.md Sec. 16) before admitting traffic,
+and ``/healthz`` answers 503 + ``Retry-After`` (``"warming"``) until it
+finishes — steady-state serving then performs **zero** new jit traces.
+
 ``--self-check`` starts the server in-process and drives it like a client:
-a streaming request (asserting the SSE framing contract), a non-stream
-request (asserting token identity against a direct ``ContinuousEngine``
-run of the same prompt — the front door must not change greedy tokens), a
-mid-stream disconnect (asserting the engine aborts the request and the
-page pool drains back to baseline), then scrapes ``/metrics`` to
-``--metrics-out``.
+waits out the warming window (printing the warmup report), snapshots the
+trace-count probe, then runs a streaming request (asserting the SSE
+framing contract), a non-stream request (asserting token identity against
+a direct ``ContinuousEngine`` run of the same prompt — the front door must
+not change greedy tokens), a mid-stream disconnect (asserting the engine
+aborts the request and the page pool drains back to baseline), asserts the
+probe never moved (no steady-state retracing), then scrapes ``/metrics``
+to ``--metrics-out``.
 
 ``--self-check --chaos`` instead wraps the engine in ``EngineSupervisor``
 with a seeded ``FaultPlan`` (DESIGN.md Sec. 14) and drives concurrent
 streaming clients through the injected crashes: clients retry on 503
-(recovery window) / 429, every final stream must be byte-identical to a
-fault-free reference run, and the page pool must audit clean afterwards
-(``check_invariants(expect_idle=True)`` — zero leaked pages).
+(warming / recovery window) / 429, every final stream must be
+byte-identical to a fault-free reference run, every rebuilt engine
+incarnation is re-warmed inside its recovery window, and the page pool
+must audit clean afterwards (``check_invariants(expect_idle=True)`` —
+zero leaked pages).
 
 In foreground mode (no ``--self-check``) SIGTERM/SIGINT triggers a
 graceful drain: admissions answer 503 while in-flight requests run to
@@ -110,10 +119,42 @@ def _stream(host, port, body, hang_up_after=None):
         buf += data
 
 
+def _healthz(host, port):
+    conn = http.client.HTTPConnection(host, port, timeout=30)
+    conn.request("GET", "/healthz")
+    resp = conn.getresponse()
+    body = json.loads(resp.read().decode())
+    retry = resp.getheader("Retry-After")
+    conn.close()
+    return resp.status, body, retry
+
+
+def _await_warm(srv, host, port, timeout=600.0):
+    """Block until the startup warmup finishes. While the engine loop is
+    warming, ``/healthz`` must answer 503 + ``Retry-After`` — the same
+    come-back-later contract as the crash-recovery window."""
+    loop = srv.engine_loop
+    deadline = time.monotonic() + timeout
+    while loop.warming or loop.engine.stats()["warmup_traces"] == 0:
+        status, body, retry = _healthz(host, port)
+        if body.get("status") == "warming":
+            assert status == 503 and retry, (status, retry)
+        assert time.monotonic() < deadline, "warmup did not finish"
+        time.sleep(0.05)
+    status, body, _ = _healthz(host, port)
+    assert status == 200 and body["status"] == "ok", body
+
+
 def self_check(srv, host, port, metrics_out):
-    from repro.serve import ContinuousEngine
+    from repro.serve import ContinuousEngine, jit_trace_count
 
     eng = srv.engine_loop.engine
+    _await_warm(srv, host, port)
+    st = eng.stats()
+    print(f"[self-check] warmup: {st['warmup_traces']} dispatch shapes "
+          f"AOT-compiled in {st['warmup_seconds']:.2f}s; /healthz ok")
+    traces0 = jit_trace_count()
+
     rng = np.random.default_rng(7)
     prompt = rng.integers(0, 64, (9,)).astype(np.int32)
     body = {"prompt": prompt.tolist(), "max_tokens": 24}
@@ -154,11 +195,18 @@ def self_check(srv, host, port, metrics_out):
     print(f"[self-check] disconnect after {len(partial)} tokens: engine "
           "aborted the request, page pool back to baseline")
 
+    n_new = jit_trace_count() - traces0
+    assert n_new == 0, f"steady-state serving retraced ({n_new} new traces)"
+    print("[self-check] no-retrace: 0 new jit traces across the entire "
+          "serving phase (stream + non-stream + disconnect)")
+
     conn = http.client.HTTPConnection(host, port, timeout=30)
     conn.request("GET", "/metrics")
     scrape = conn.getresponse().read().decode()
     conn.close()
     assert "msb_ttft_seconds_count" in scrape
+    assert "msb_warmup_seconds" in scrape
+    assert "msb_traces_compiled_total" in scrape
     if metrics_out:
         with open(metrics_out, "w") as f:
             f.write(scrape)
@@ -208,10 +256,18 @@ def chaos_check(srv, sup, plan, host, port, prompts, refs, metrics_out):
         time.sleep(0.05)
     cache.check_invariants(expect_idle=True)   # zero leaked pages
     st = sup.stats()
+    # warmup is sticky across crashes: every rebuilt incarnation re-warms
+    # inside its recovery window, so warmup_traces accumulates one full
+    # shape set per incarnation (restarts + the original)
+    per_inc = sup.engine.warmup_entries
+    assert per_inc > 0, "rebuilt incarnation was not re-warmed"
+    assert st["warmup_traces"] >= per_inc * (st["restarts"] + 1), st
     print(f"[chaos] {len(prompts)} clients byte-identical through "
           f"{len(plan.fired)} injected faults ({st['restarts']} restarts, "
           f"{st['replayed_tokens']} tokens replayed, "
-          f"{st['watchdog_trips']} watchdog trips); pool audit clean")
+          f"{st['watchdog_trips']} watchdog trips); pool audit clean; "
+          f"{st['restarts']} incarnations re-warmed "
+          f"({st['warmup_traces']} shapes, {st['warmup_seconds']:.2f}s)")
     if metrics_out:
         conn = http.client.HTTPConnection(host, port, timeout=30)
         conn.request("GET", "/metrics")
@@ -251,7 +307,8 @@ def run_chaos(args):
     sup = EngineSupervisor(
         lambda: ContinuousEngine(model, params, faults=plan, **kw),
         watchdog=False, max_crashes_per_request=100)
-    srv = APIServer(sup, host=args.host, port=0, max_timeout_s=300.0)
+    srv = APIServer(sup, host=args.host, port=0, max_timeout_s=300.0,
+                    warmup=True)
     host, port = srv.serve_background()
     print(f"[chaos] seeded plan {plan} against http://{host}:{port}")
     try:
@@ -288,7 +345,7 @@ def main():
     engine = build_engine()
     srv = APIServer(engine, host=args.host,
                     port=0 if args.self_check else args.port,
-                    max_timeout_s=300.0)
+                    max_timeout_s=300.0, warmup=True)
     if not args.self_check:
         srv.run()                               # blocks until interrupted
         return

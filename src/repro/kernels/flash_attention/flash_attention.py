@@ -9,6 +9,15 @@ charges the XLA path for (EXPERIMENTS.md §Perf).
 
 q: (B, H, Sq, d), k/v: (B, KV, Skv, d) — head-major layout so each grid row
 streams one head's tiles.
+
+Segment-aware masking (packed ragged prefill, DESIGN.md Sec. 16): pass
+``q_segs``/``kv_segs`` of shape (B, Sq)/(B, Skv) and attention is
+additionally masked to ``kv_seg == q_seg`` — tokens of different packed
+segments attend to each other with exactly zero weight. Segments must be
+contiguous along the sequence axis for causal masking to stay per-segment
+correct (global order equals local order then); a pad id of -1 on the q
+side yields an all-masked row, which the softmax guard sends to zero
+output.
 """
 from __future__ import annotations
 
@@ -21,12 +30,17 @@ from jax.experimental import pallas as pl
 _NEG_INF = -2.0e38
 
 
-def _kernel(q_ref, k_ref, v_ref, o_ref, *, bq, bkv, skv, causal, window,
-            softcap, scale):
+def _kernel(*refs, bq, bkv, skv, causal, window, softcap, scale, segmented):
+    if segmented:
+        q_ref, k_ref, v_ref, qs_ref, ks_ref, o_ref = refs
+    else:
+        q_ref, k_ref, v_ref, o_ref = refs
+        qs_ref = ks_ref = None
     iq = pl.program_id(1)
     q = q_ref[...].astype(jnp.float32) * scale          # (bq, d)
     d = q.shape[-1]
     qpos = iq * bq + jax.lax.iota(jnp.int32, bq)
+    qseg = qs_ref[...] if segmented else None           # (bq,)
 
     n_kv = skv // bkv
     if causal:
@@ -49,9 +63,16 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, *, bq, bkv, skv, causal, window,
             mask &= kpos[None, :] <= qpos[:, None]
         if window > 0:
             mask &= kpos[None, :] > qpos[:, None] - window
+        if segmented:
+            kseg = pl.load(ks_ref, (pl.dslice(ik * bkv, bkv),))
+            # same segment, and neither side a pad (-1): pads never attend
+            mask &= (kseg[None, :] == qseg[:, None]) & (qseg[:, None] >= 0)
         s = jnp.where(mask, s, _NEG_INF)
         m_new = jnp.maximum(m_i, jnp.max(s, axis=-1))
         p = jnp.exp(s - m_new[:, None])
+        # an all-masked row (a pad segment) keeps m at _NEG_INF, making
+        # every p term exp(0)=1; zero it so l stays 0 and the output 0
+        p = jnp.where(mask, p, 0.0)
         corr = jnp.exp(m_i - m_new)
         l_new = l_i * corr + jnp.sum(p, axis=-1)
         pv = jnp.dot(p.astype(vt.dtype), vt,
@@ -68,9 +89,14 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, *, bq, bkv, skv, causal, window,
 
 @functools.partial(jax.jit, static_argnames=(
     "causal", "window", "softcap", "scale", "bq", "bkv", "interpret"))
-def flash_attention_fwd(q, k, v, *, causal=True, window=0, softcap=0.0,
-                        scale=None, bq=128, bkv=128, interpret=False):
-    """q: (B, H, Sq, d); k/v: (B, KV, Skv, d). Returns (B, H, Sq, d)."""
+def flash_attention_fwd(q, k, v, q_segs=None, kv_segs=None, *, causal=True,
+                        window=0, softcap=0.0, scale=None, bq=128, bkv=128,
+                        interpret=False):
+    """q: (B, H, Sq, d); k/v: (B, KV, Skv, d). Returns (B, H, Sq, d).
+    ``q_segs``/``kv_segs``: optional (B, Sq)/(B, Skv) int32 segment ids —
+    pass both or neither; cross-segment attention is masked out."""
+    if (q_segs is None) != (kv_segs is None):
+        raise ValueError("pass both q_segs and kv_segs, or neither")
     b, h, sq, d = q.shape
     kv, skv = k.shape[1], k.shape[2]
     rep = h // kv
@@ -78,24 +104,33 @@ def flash_attention_fwd(q, k, v, *, causal=True, window=0, softcap=0.0,
     bq = min(bq, sq)
     bkv = min(bkv, skv)
     assert sq % bq == 0 and skv % bkv == 0
+    segmented = q_segs is not None
 
     qr = q.reshape(b * h, sq, d)
     kr = jnp.repeat(k, rep, axis=1).reshape(b * h, skv, d)
     vr = jnp.repeat(v, rep, axis=1).reshape(b * h, skv, d)
 
     grid = (b * h, sq // bq)
+    in_specs = [
+        pl.BlockSpec((None, bq, d), lambda g, i: (g, i, 0)),
+        pl.BlockSpec((None, skv, d), lambda g, i: (g, 0, 0)),
+        pl.BlockSpec((None, skv, d), lambda g, i: (g, 0, 0)),
+    ]
+    args = [qr, kr, vr]
+    if segmented:
+        # one seg row per (batch, head) grid row, matching the q reshape
+        args.append(jnp.repeat(jnp.asarray(q_segs, jnp.int32), h, axis=0))
+        args.append(jnp.repeat(jnp.asarray(kv_segs, jnp.int32), h, axis=0))
+        in_specs.append(pl.BlockSpec((None, bq), lambda g, i: (g, i)))
+        in_specs.append(pl.BlockSpec((None, skv), lambda g, i: (g, 0)))
     out = pl.pallas_call(
         functools.partial(_kernel, bq=bq, bkv=bkv, skv=skv, causal=causal,
                           window=int(window), softcap=float(softcap),
-                          scale=scale),
+                          scale=scale, segmented=segmented),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((None, bq, d), lambda g, i: (g, i, 0)),
-            pl.BlockSpec((None, skv, d), lambda g, i: (g, 0, 0)),
-            pl.BlockSpec((None, skv, d), lambda g, i: (g, 0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((None, bq, d), lambda g, i: (g, i, 0)),
         out_shape=jax.ShapeDtypeStruct((b * h, sq, d), q.dtype),
         interpret=interpret,
-    )(qr, kr, vr)
+    )(*args)
     return out.reshape(b, h, sq, d)

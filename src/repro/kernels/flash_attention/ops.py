@@ -4,18 +4,24 @@ from __future__ import annotations
 import jax
 
 from .flash_attention import flash_attention_fwd
-from .ref import flash_attention_ref
+from .ref import flash_attention_ref, flash_attention_segmented_ref
 
 
-def attention(q, k, v, *, causal=True, window=0, softcap=0.0, scale=None,
-              use_kernel=None, interpret=None):
+def attention(q, k, v, *, q_segs=None, kv_segs=None, causal=True, window=0,
+              softcap=0.0, scale=None, use_kernel=None, interpret=None):
+    if (q_segs is None) != (kv_segs is None):
+        raise ValueError("pass both q_segs and kv_segs, or neither")
     if use_kernel is None:
         use_kernel = jax.default_backend() == "tpu"
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     if use_kernel:
-        return flash_attention_fwd(q, k, v, causal=causal, window=window,
-                                   softcap=softcap, scale=scale,
-                                   interpret=interpret)
+        return flash_attention_fwd(q, k, v, q_segs, kv_segs, causal=causal,
+                                   window=window, softcap=softcap,
+                                   scale=scale, interpret=interpret)
+    if q_segs is not None:
+        return flash_attention_segmented_ref(q, k, v, q_segs, kv_segs,
+                                             causal=causal, window=window,
+                                             softcap=softcap, scale=scale)
     return flash_attention_ref(q, k, v, causal=causal, window=window,
                                softcap=softcap, scale=scale)

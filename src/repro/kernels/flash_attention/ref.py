@@ -1,12 +1,20 @@
 """Oracle for the Pallas flash-attention kernel: the pure-jnp chunked
 implementation from models/attention.py (itself validated against naive
 softmax attention in tests/test_attention.py), adapted to head-major layout.
+
+The segmented variant (packed ragged prefill) is a separate forward-only
+full-softmax oracle: the chunked custom-VJP path stays untouched, and a
+naive masked softmax is the clearest possible statement of the semantics
+the kernel must match — cross-segment weights exactly zero, all-masked
+(pad) rows exactly zero output.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 
 from ...models.attention import flash_attention as _fa
+
+_NEG_INF = -2.0e38
 
 
 def flash_attention_ref(q, k, v, *, causal=True, window=0, softcap=0.0,
@@ -16,3 +24,39 @@ def flash_attention_ref(q, k, v, *, causal=True, window=0, softcap=0.0,
               jnp.moveaxis(v, 1, 2), causal=causal, window=window,
               softcap=softcap, scale=scale)
     return jnp.moveaxis(out, 1, 2)
+
+
+def flash_attention_segmented_ref(q, k, v, q_segs, kv_segs, *, causal=True,
+                                  window=0, softcap=0.0, scale=None):
+    """Forward-only full-softmax oracle with segment masking.
+
+    q: (B, H, Sq, d); k/v: (B, KV, Skv, d); q_segs/kv_segs: (B, Sq)/(B, Skv)
+    int32 segment ids (use -1 for pads). Attention weight between tokens of
+    different segments is exactly zero; a row with no eligible key (a pad)
+    returns exactly zero.
+    """
+    b, h, sq, d = q.shape
+    kv = k.shape[1]
+    rep = h // kv
+    scale = float(scale if scale is not None else d ** -0.5)
+    kr = jnp.repeat(k, rep, axis=1)
+    vr = jnp.repeat(v, rep, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32) * scale,
+                   kr.astype(jnp.float32))
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = jnp.arange(sq)
+    kpos = jnp.arange(k.shape[2])
+    qs = jnp.asarray(q_segs, jnp.int32)[:, None, :, None]
+    ks = jnp.asarray(kv_segs, jnp.int32)[:, None, None, :]
+    mask = (qs == ks) & (qs >= 0)    # pads (-1) never attend, even pads
+    if causal:
+        mask &= kpos[None, None, None, :] <= qpos[None, None, :, None]
+    if window > 0:
+        mask &= kpos[None, None, None, :] > qpos[None, None, :, None] - window
+    s = jnp.where(mask, s, _NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.where(mask, jnp.exp(s - m), 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vr.astype(jnp.float32))
+    return (out / jnp.maximum(l, 1e-30)).astype(q.dtype)

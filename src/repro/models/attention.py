@@ -350,6 +350,103 @@ def paged_write(k_pool, v_pool, k_new, v_new, block_tables, q_pos):
 
 
 # ---------------------------------------------------------------------------
+# Packed ragged prefill (DESIGN.md Sec. 16)
+#
+# A packed prefill dispatch carries the concatenated chunks of up to S
+# sequences in one (1, T) token row. Per-token segment ids select each
+# token's own block-table row, so the gathered K/V for token i contains
+# *only* segment seg_ids[i]'s pages — cross-segment attention is
+# structurally zero, not masked-to-zero. Pad tokens carry seg_ids = -1 and
+# q_pos = -1 and land on the reserved scratch page/hot-row, exactly like
+# pad rows on the unpacked path.
+# ---------------------------------------------------------------------------
+
+
+def paged_write_packed(k_pool, v_pool, k_new, v_new, block_tables, seg_ids,
+                       q_pos):
+    """Scatter packed K/V rows into the pools via per-token segment ids.
+
+    k_new/v_new: (1, T, KV, d); seg_ids/q_pos: (1, T) (-1 = pad);
+    block_tables: (S, max_pages) — one row per packable segment. Each
+    token writes page ``block_tables[seg_ids[i], q_pos[i] // ps]``; pads
+    write scratch page 0.
+    """
+    n_pages, ps, kv, d = k_pool.shape
+    seg = jnp.maximum(seg_ids[0], 0)
+    pos = jnp.maximum(q_pos[0], 0)
+    page = block_tables[seg, pos // ps]
+    valid = (seg_ids[0] >= 0) & (q_pos[0] >= 0)
+    flat = jnp.where(valid, page * ps + pos % ps, 0)
+    k_pool = k_pool.reshape(n_pages * ps, kv, d).at[flat].set(
+        k_new.reshape(-1, kv, d).astype(k_pool.dtype)).reshape(
+            n_pages, ps, kv, d)
+    v_pool = v_pool.reshape(n_pages * ps, kv, d).at[flat].set(
+        v_new.reshape(-1, kv, d).astype(v_pool.dtype)).reshape(
+            n_pages, ps, kv, d)
+    return k_pool, v_pool
+
+
+def paged_attention_packed(q, k_pool, v_pool, block_tables, seg_ids, q_pos,
+                           kv_lens, *, window=0, softcap=0.0, scale=None):
+    """Packed ragged attention: per-token gather of the token's own segment.
+
+    q: (1, T, H, d); block_tables: (S, max_pages); seg_ids/q_pos: (1, T);
+    kv_lens: (S,) per-segment lengths incl. this dispatch. Re-expresses the
+    packed row as T single-token "sequences" — token i gathers
+    ``block_tables[seg_ids[i]]`` — and reuses ``paged_attention``, so
+    causality-by-absolute-position and the zero cross-segment guarantee
+    both fall out of the existing masking.
+    """
+    seg = jnp.maximum(seg_ids[0], 0)
+    valid = seg_ids[0] >= 0
+    bt_tok = block_tables[seg]                             # (T, max_pages)
+    lens_tok = jnp.where(valid, kv_lens[seg], 0)
+    out = paged_attention(q[0][:, None], k_pool, v_pool, bt_tok,
+                          q_pos[0][:, None], lens_tok, window=window,
+                          softcap=softcap, scale=scale)
+    return out[:, 0][None]                                 # (1, T, H, d)
+
+
+def paged_write_quant_packed(cache, k_new, v_new, block_tables, seg_ids,
+                             q_pos, kv_lens, slots, seg_off, kv_bits):
+    """Packed variant of ``paged_write_quant``.
+
+    Re-views the (1, T) packed row as an (S, T) per-segment batch: row s
+    keeps q_pos where ``seg_ids == s`` and -1 elsewhere, so the unpacked
+    hot-write/commit-quantize machinery applies unchanged. ``seg_off``
+    (S,) is each segment's first index in the packed row — threaded
+    through as ``tok_base`` so commit-quantize gathers chunk content from
+    the right packed offsets.
+    """
+    s = block_tables.shape[0]
+    seg_q = jnp.where(seg_ids[0][None, :] == jnp.arange(s)[:, None],
+                      q_pos[0][None, :], -1)               # (S, T)
+    k_b = jnp.broadcast_to(k_new[0][None], (s,) + k_new[0].shape)
+    v_b = jnp.broadcast_to(v_new[0][None], (s,) + v_new[0].shape)
+    return paged_write_quant(cache, k_b, v_b, block_tables, seg_q, kv_lens,
+                             slots, kv_bits, tok_base=seg_off)
+
+
+def paged_attention_quant_packed(q, cache, block_tables, seg_ids, q_pos,
+                                 kv_lens, slots, kv_bits, *, window=0,
+                                 softcap=0.0, scale=None):
+    """Packed attention over quantized pools: per-token segment views of
+    block tables / lengths / slots, then ``paged_attention_quant`` verbatim
+    (the hot-row frontier overlay indexes per token, so each token reads
+    its own segment's partial page at full precision)."""
+    seg = jnp.maximum(seg_ids[0], 0)
+    valid = seg_ids[0] >= 0
+    bt_tok = block_tables[seg]
+    lens_tok = jnp.where(valid, kv_lens[seg], 0)
+    slots_tok = jnp.where(valid, slots[seg], -1)
+    out = paged_attention_quant(q[0][:, None], cache, bt_tok,
+                                q_pos[0][:, None], lens_tok, slots_tok,
+                                kv_bits, window=window, softcap=softcap,
+                                scale=scale)
+    return out[:, 0][None]
+
+
+# ---------------------------------------------------------------------------
 # Quantized page pools (kv_bits < 16; DESIGN.md Sec. 15)
 #
 # Dual-pool layout per layer period:
@@ -368,13 +465,16 @@ def paged_write(k_pool, v_pool, k_new, v_new, block_tables, q_pos):
 
 
 def paged_write_quant(cache, k_new, v_new, block_tables, q_pos, kv_lens,
-                      slots, kv_bits):
+                      slots, kv_bits, tok_base=None):
     """Hot-page write + commit-time quantization (quantize-on-commit).
 
     cache: dict(k_codes, v_codes, k_scales, v_scales, k_hot, v_hot) — one
     layer period's leaves; k_new/v_new: (B, T, KV, hd) roped; q_pos (B, T)
     absolute positions (-1 = pad); kv_lens (B,) length incl. this chunk;
     slots (B,) engine slot ids (-1 = pad row); kv_bits: static 4 or 8.
+    ``tok_base`` (B,) offsets the chunk-content gather along T: row b's
+    valid tokens start at packed index tok_base[b] instead of 0 (packed
+    ragged prefill passes each segment's offset; None = 0 everywhere).
 
     New positions in a row's *final* page go to its hot row; every page
     this chunk completes (up to T // ps + 1 of them) is gathered from (old
@@ -409,7 +509,8 @@ def paged_write_quant(cache, k_new, v_new, block_tables, q_pos, kv_lens,
     jp = start[:, None] // ps + i[None, :]                        # (B, nc)
     completed = ((jp + 1) * ps <= kv_lens[:, None]) & (n_valid[:, None] > 0)
     gp = jp[:, :, None] * ps + jnp.arange(ps, dtype=jnp.int32)    # (B, nc, ps)
-    tidx = jnp.clip(gp - start[:, None, None], 0, t - 1)
+    base = jnp.zeros((b,), jnp.int32) if tok_base is None else tok_base
+    tidx = jnp.clip(base[:, None, None] + gp - start[:, None, None], 0, t - 1)
     bidx = jnp.arange(b)[:, None, None]
     from_new = (gp >= start[:, None, None])[..., None, None]
     # page content: positions >= start from this chunk, earlier positions

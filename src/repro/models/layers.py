@@ -15,7 +15,10 @@ import jax
 import jax.numpy as jnp
 
 from .attention import (decode_attention, flash_attention, paged_attention,
-                        paged_attention_quant, paged_write, paged_write_quant)
+                        paged_attention_packed, paged_attention_quant,
+                        paged_attention_quant_packed, paged_write,
+                        paged_write_packed, paged_write_quant,
+                        paged_write_quant_packed)
 
 
 def rms_norm(x, scale, eps=1e-6):
@@ -180,6 +183,30 @@ def attention_layer(p, x, cfg, positions, *, window=0, cache=None,
             safe_pos = jnp.maximum(q_pos, 0)
             q = rope(q, safe_pos, cfg.rope_theta)
             k = rope(k, safe_pos, cfg.rope_theta)
+        seg_ids = paged.get("seg_ids")
+        if seg_ids is not None:
+            # packed ragged prefill: one (1, T) row carrying several
+            # segments; block_tables is (S, max_pages), per-token seg ids
+            # route every write/gather to the token's own segment
+            if "k_codes" in cache:
+                new_cache = paged_write_quant_packed(
+                    cache, k, v, paged["block_tables"], seg_ids, q_pos,
+                    paged["kv_lens"], paged["slots"], paged["seg_off"],
+                    paged["kv_bits"])
+                out = paged_attention_quant_packed(
+                    q, new_cache, paged["block_tables"], seg_ids, q_pos,
+                    paged["kv_lens"], paged["slots"], paged["kv_bits"],
+                    window=window, softcap=softcap, scale=scale)
+                return _attn_out_proj(out, p["wo"], tp, h), new_cache
+            k_pool, v_pool = paged_write_packed(
+                cache["k"], cache["v"], k, v, paged["block_tables"],
+                seg_ids, q_pos)
+            out = paged_attention_packed(
+                q, k_pool, v_pool, paged["block_tables"], seg_ids, q_pos,
+                paged["kv_lens"], window=window, softcap=softcap,
+                scale=scale)
+            return (_attn_out_proj(out, p["wo"], tp, h),
+                    {"k": k_pool, "v": v_pool})
         if "k_codes" in cache:
             # quantized pools (kv_bits < 16): hot-page write + commit-time
             # quantization, attention fuses dequant into the gather

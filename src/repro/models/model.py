@@ -290,6 +290,51 @@ class Model:
         hidden = jnp.take_along_axis(x, last[:, None, None], axis=1)[:, 0]
         return self._logits(params, hidden, parallel), {"layers": layer_pools}
 
+    def paged_prefill_packed(self, params, pools, tokens, seg_ids, q_pos,
+                             kv_lens, block_tables, slots, last_idx, seg_off,
+                             parallel=None, kv_bits=16):
+        """Packed ragged prefill: several sequences' chunks in one dispatch.
+
+        tokens/seg_ids/q_pos: (T,) int32 — the concatenation of up to S
+        segments' prefill chunks, padded to the bucket length T. seg_ids[i]
+        names token i's segment (-1 = pad, q_pos then -1 too); q_pos[i] is
+        its absolute position in that segment, so prefix-cache-resumed
+        prompts pack at their adopted boundary. Per-segment arrays (S,):
+        kv_lens (cache length incl. this dispatch; 0 = pad segment),
+        block_tables (S, max_pages), slots (engine slot ids, -1 = pad;
+        required when kv_bits < 16), last_idx (packed index of the
+        segment's last token this dispatch — where its next-token logits
+        are read; 0 for pads), seg_off (packed index of the segment's first
+        token — the quantized commit path's chunk-content base offset).
+
+        Cross-segment attention is exactly zero by construction: each
+        token's K/V gather walks only its own segment's block-table row
+        (models/attention.py packed helpers). Returns
+        ``(logits (S, vocab), new_pools)``; pad-segment logits are garbage
+        the caller discards. Runs under the same three execution regimes as
+        ``paged_step`` (plain jit / GSPMD ``parallel`` / ``TPShard`` inside
+        shard_map).
+        """
+        cfg = self.cfg
+        x = self._embed(params, jnp.maximum(tokens, 0)[None])      # (1, T, D)
+        if not cfg.use_rope:
+            x = x + _sinusoid(jnp.maximum(q_pos, 0)[None],
+                              cfg.d_model).astype(cfg.dtype)
+        paged = {"block_tables": block_tables, "q_pos": q_pos[None],
+                 "kv_lens": kv_lens, "kv_bits": int(kv_bits),
+                 "seg_ids": seg_ids[None]}
+        if kv_bits != 16:
+            if slots is None:
+                raise ValueError("kv_bits < 16 needs the slots array")
+            paged["slots"] = jnp.asarray(slots, jnp.int32)
+            paged["seg_off"] = jnp.asarray(seg_off, jnp.int32)
+        x, layer_pools, _ = forward_stack(
+            params["dec"], x, cfg, positions=q_pos[None], parallel=parallel,
+            cache=pools["layers"], paged=paged)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        hidden = x[0][jnp.maximum(last_idx, 0)]                    # (S, D)
+        return self._logits(params, hidden, parallel), {"layers": layer_pools}
+
     def paged_decode_horizon(self, params, pools, tokens, start_pos,
                              block_tables, n_left, eos_ids, horizon,
                              parallel=None, kv_bits=16, slots=None):

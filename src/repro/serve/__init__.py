@@ -1,4 +1,4 @@
-from .continuous import ContinuousEngine
+from .continuous import ContinuousEngine, jit_trace_count
 from .engine import ServeEngine
 from .faults import NO_FAULTS, FaultEvent, FaultPlan, InjectedFault, \
     InjectedOOM
@@ -10,7 +10,9 @@ from .paged_cache import (OutOfPages, PagedKVCache, PageStateError,
 from .scheduler import Request, Saturated, Scheduler, Sequence
 from .server import APIServer, EngineLoop
 from .supervisor import (Draining, EngineDied, EngineSupervisor,
-                         PoisonedRequest, Recovering, WatchdogTimeout)
+                         PoisonedRequest, Recovering, Warming,
+                         WatchdogTimeout)
+from .warmup import enumerate_traces, warm_engine
 
 __all__ = ["APIServer", "CompletionParams", "ContinuousEngine", "Counter",
            "Draining", "EngineDied", "EngineLoop", "EngineSupervisor",
@@ -19,4 +21,6 @@ __all__ = ["APIServer", "CompletionParams", "ContinuousEngine", "Counter",
            "PageStateError", "PoisonedRequest", "PrefixMatch", "Recovering",
            "Registry", "Request", "RequestLifecycle", "Saturated",
            "Scheduler", "Sequence", "ServeEngine", "ServeMetrics",
-           "ValidationError", "WatchdogTimeout", "parse_completion_request"]
+           "ValidationError", "Warming", "WatchdogTimeout",
+           "enumerate_traces", "jit_trace_count", "parse_completion_request",
+           "warm_engine"]

@@ -78,12 +78,41 @@ from .scheduler import DECODE, FINISHED, Request, Scheduler, Sequence
 # the right hot row (-1 pads land on the scratch row).
 _DONATE = (2,) if jax.default_backend() in ("tpu", "gpu") else ()
 
+# Trace-count probe (DESIGN.md Sec. 16): a Python-side counter bumped at
+# the top of every traced dispatch body. jit runs the Python body once per
+# trace, never per call, so after AOT warmup a steady-state serving run
+# must leave this number unchanged — the property the warmup tests and the
+# ``msb_traces_compiled_total`` metric assert. Process-global on purpose:
+# module-level jits share their compile cache across engines.
+_N_TRACES = 0
+
+
+def _note_trace():
+    global _N_TRACES
+    _N_TRACES += 1
+
+
+def jit_trace_count() -> int:
+    """Traced-dispatch events so far in this process (monotonic)."""
+    return _N_TRACES
+
 
 @functools.partial(jax.jit, static_argnums=(0, 1), donate_argnums=_DONATE)
 def _paged_step(model, kv_bits, pools, params, tokens, q_pos, kv_lens,
                 block_tables, slots):
+    _note_trace()
     return model.paged_step(params, pools, tokens, q_pos, kv_lens,
                             block_tables, kv_bits=kv_bits, slots=slots)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1), donate_argnums=_DONATE)
+def _paged_prefill_packed(model, kv_bits, pools, params, tokens, seg_ids,
+                          q_pos, kv_lens, block_tables, slots, last_idx,
+                          seg_off):
+    _note_trace()
+    return model.paged_prefill_packed(params, pools, tokens, seg_ids, q_pos,
+                                      kv_lens, block_tables, slots, last_idx,
+                                      seg_off, kv_bits=kv_bits)
 
 
 # decode-horizon dispatch: pools is positional arg 3 here (model, the
@@ -94,6 +123,7 @@ _DONATE_H = (3,) if jax.default_backend() in ("tpu", "gpu") else ()
 @functools.partial(jax.jit, static_argnums=(0, 1, 2), donate_argnums=_DONATE_H)
 def _paged_horizon_step(model, horizon, kv_bits, pools, params, tokens,
                         start_pos, n_left, eos_ids, block_tables, slots):
+    _note_trace()
     return model.paged_decode_horizon(params, pools, tokens, start_pos,
                                       block_tables, n_left, eos_ids, horizon,
                                       kv_bits=kv_bits, slots=slots)
@@ -117,6 +147,8 @@ class ContinuousEngine:
     kv_bits: int = 16                 # committed-page precision: 16 | 8 | 4
     max_waiting: Optional[int] = None  # backpressure: bound on waiting queue
     faults: object = None             # FaultPlan (testing); None = NO_FAULTS
+    prefill_packing: bool = True      # pack prompts into ragged dispatches
+    prefill_buckets: object = None    # packed lengths; None = derived ladder
 
     def __post_init__(self):
         from .engine import resolve_execution
@@ -149,10 +181,25 @@ class ContinuousEngine:
             max_seqs=self.max_batch, max_pages_per_seq=mpps,
             prefix_cache=self.prefix_cache, faults=self.faults,
             kv_bits=self.kv_bits)
+        # packed ragged prefill (DESIGN.md Sec. 16): the bucket ladder is
+        # the set of packed token lengths — each is one jit trace, so the
+        # default caps it at three powers-of-two steps from prefill_chunk;
+        # pass prefill_buckets= to widen/narrow the set explicitly
+        if self.prefill_packing:
+            if self.prefill_buckets is None:
+                c = self.prefill_chunk
+                self.prefill_buckets = (c, 2 * c, 4 * c)
+            self.prefill_buckets = tuple(
+                sorted(int(b) for b in self.prefill_buckets))
+            if self.prefill_buckets[0] < 1:
+                raise ValueError("prefill_buckets must be positive")
+        else:
+            self.prefill_buckets = None
         self.scheduler = Scheduler(self.cache, self.max_batch,
                                    self.prefill_chunk,
                                    decode_horizon=self.decode_horizon,
-                                   max_waiting=self.max_waiting)
+                                   max_waiting=self.max_waiting,
+                                   prefill_buckets=self.prefill_buckets)
         if self.mesh is not None:
             self._init_tensor_parallel()
         elif self.parallel is None:
@@ -161,17 +208,31 @@ class ContinuousEngine:
             self._horizon_fn = functools.partial(
                 _paged_horizon_step, self.model, self.decode_horizon,
                 self.kv_bits)
+            self._prefill_fn = functools.partial(
+                _paged_prefill_packed, self.model, self.kv_bits)
         else:                              # parallel objects aren't hashable
-            self._step_fn = jax.jit(
-                lambda pools, p, toks, qpos, kvl, bt, sl:
-                self.model.paged_step(
+            def _gspmd_step(pools, p, toks, qpos, kvl, bt, sl):
+                _note_trace()
+                return self.model.paged_step(
                     p, pools, toks, qpos, kvl, bt, self.parallel,
-                    kv_bits=self.kv_bits, slots=sl))
-            self._horizon_fn = jax.jit(
-                lambda pools, p, toks, sp, nl, eos, bt, sl:
-                self.model.paged_decode_horizon(
+                    kv_bits=self.kv_bits, slots=sl)
+
+            def _gspmd_horizon(pools, p, toks, sp, nl, eos, bt, sl):
+                _note_trace()
+                return self.model.paged_decode_horizon(
                     p, pools, toks, sp, bt, nl, eos, self.decode_horizon,
-                    self.parallel, kv_bits=self.kv_bits, slots=sl))
+                    self.parallel, kv_bits=self.kv_bits, slots=sl)
+
+            def _gspmd_prefill(pools, p, toks, segs, qpos, kvl, bt, sl, li,
+                               so):
+                _note_trace()
+                return self.model.paged_prefill_packed(
+                    p, pools, toks, segs, qpos, kvl, bt, sl, li, so,
+                    self.parallel, kv_bits=self.kv_bits)
+
+            self._step_fn = jax.jit(_gspmd_step)
+            self._horizon_fn = jax.jit(_gspmd_horizon)
+            self._prefill_fn = jax.jit(_gspmd_prefill)
         self._next_id = 0
         self._seqs: Dict[int, Sequence] = {}
         self._finished: Dict[int, np.ndarray] = {}
@@ -183,11 +244,20 @@ class ContinuousEngine:
         self.n_tokens_out = 0
         self.n_work_positions = 0     # device token-positions incl. padding
         self.n_forks = 0              # fork_request children that shared pages
+        self.n_prefill_dispatches = 0  # prefill device dispatches (any kind)
+        self.n_prefill_segments = 0    # sequences served across them
+        # segments-per-packed-dispatch samples, drained by the metrics sync
+        # into the msb_prefill_packed_segments histogram (bounded if no one
+        # drains, e.g. a bench driving the engine directly)
+        self.packed_segment_obs: List[int] = []
+        self.warmup_seconds = 0.0     # wall seconds spent in warmup()
+        self.warmup_entries = 0       # dispatch shapes warmed
         # crash blame: request ids in the work unit the current (or most
         # recently crashed) step dispatched — a prefill names one sequence,
         # a decode names the batch; () before any work is scheduled. The
         # supervisor reads this to attribute a crash (DESIGN.md Sec. 14).
         self.last_step_rids: Tuple[int, ...] = ()
+        self.last_step_kind: str = ""
 
     def _init_tensor_parallel(self):
         """Shard params + page pools over ``mesh`` and build the shard_map
@@ -237,6 +307,7 @@ class ContinuousEngine:
         model, rep, kv_bits = self.model, P(), self.kv_bits
 
         def local_step(pools, params, tokens, q_pos, kv_lens, bt, slots):
+            _note_trace()
             return model.paged_step(tp_localize(params), pools, tokens,
                                     q_pos, kv_lens, bt, parallel=tp,
                                     kv_bits=kv_bits, slots=slots)
@@ -248,12 +319,31 @@ class ContinuousEngine:
         donate = (0,) if jax.default_backend() in ("tpu", "gpu") else ()
         self._step_fn = jax.jit(fn, donate_argnums=donate)
 
+        # packed ragged prefill under the same mesh: control arrays (seg
+        # ids, positions, tables, offsets) are replicated; only the pools
+        # and params are sharded, so the packed gather runs per rank on its
+        # KV-head slice exactly like the unpacked step
+        def local_prefill(pools, params, tokens, seg_ids, q_pos, kv_lens,
+                          bt, slots, last_idx, seg_off):
+            _note_trace()
+            return model.paged_prefill_packed(
+                tp_localize(params), pools, tokens, seg_ids, q_pos, kv_lens,
+                bt, slots, last_idx, seg_off, parallel=tp, kv_bits=kv_bits)
+
+        pfn = shard_map_compat(
+            local_prefill, self.mesh,
+            in_specs=(pool_spec, pspecs, rep, rep, rep, rep, rep, rep, rep,
+                      rep),
+            out_specs=(rep, pool_spec))
+        self._prefill_fn = jax.jit(pfn, donate_argnums=donate)
+
         # the decode-horizon scan lives *inside* the shard_map body, so H
         # fused iterations (collectives included) are still one dispatch
         horizon = self.decode_horizon
 
         def local_horizon(pools, params, tokens, start_pos, n_left, eos, bt,
                           slots):
+            _note_trace()
             return model.paged_decode_horizon(
                 tp_localize(params), pools, tokens, start_pos, bt, n_left,
                 eos, horizon, parallel=tp, kv_bits=kv_bits, slots=slots)
@@ -307,18 +397,24 @@ class ContinuousEngine:
         # blame is reset *before* the step fault-site fires so a crash here
         # (pre-schedule) attributes to no specific request
         self.last_step_rids = ()
+        self.last_step_kind = ""
         if self.faults.armed:
             self.faults.fire("step")
         work = self.scheduler.schedule()
         if work is None:
             return False
+        self.last_step_kind = work[0]
         if work[0] == "prefill":
             self.last_step_rids = (work[1].req.req_id,)
+        elif work[0] == "prefill_packed":
+            self.last_step_rids = tuple(s.req.req_id for s, _, _ in work[1])
         else:
             self.last_step_rids = tuple(s.req.req_id for s in work[1])
         self.n_steps += 1
         if work[0] == "prefill":
             self._run_prefill(*work[1:])
+        elif work[0] == "prefill_packed":
+            self._run_prefill_packed(*work[1:])
         else:
             self._run_decode(work[1])
         return True
@@ -463,9 +559,36 @@ class ContinuousEngine:
             "prefix_hits": s.n_prefix_hits,
             "prefix_positions_saved": s.n_prefix_tokens,
             "forks": self.n_forks,
+            "prefill_dispatches": self.n_prefill_dispatches,
+            "prefill_segments": self.n_prefill_segments,
+            "admission_waves": s.n_admission_waves,
+            "warmup_seconds": self.warmup_seconds,
+            "warmup_traces": self.warmup_entries,
             "queue_depth": len(s.waiting),
             "running": len(s.running),
         }
+
+    def drain_observations(self) -> Dict[str, List[int]]:
+        """Histogram samples accumulated since the last drain:
+        ``admission_queue_depth`` (one per admission wave — NOT per prefill
+        chunk) and ``packed_segments`` (one per packed prefill dispatch).
+        The metrics sync consumes these; each sample is returned once."""
+        s = self.scheduler
+        out = {"admission_queue_depth": s.queue_depth_obs,
+               "packed_segments": self.packed_segment_obs}
+        s.queue_depth_obs = []
+        self.packed_segment_obs = []
+        return out
+
+    def warmup(self) -> Dict[str, object]:
+        """AOT-warm every dispatch shape reachable from this engine's
+        config (serve/warmup.py) so steady-state serving never traces.
+        Returns the warmup report and records it in ``stats()``."""
+        from .warmup import warm_engine
+        report = warm_engine(self)
+        self.warmup_seconds += report["seconds"]
+        self.warmup_entries += report["entries"]
+        return report
 
     def close(self, check: bool = True):
         """Tear down the engine. With ``check=True`` (default) the page
@@ -502,6 +625,8 @@ class ContinuousEngine:
     def _run_prefill(self, seq, chunk_tokens, start):
         c = self.prefill_chunk
         n = len(chunk_tokens)
+        self.n_prefill_dispatches += 1
+        self.n_prefill_segments += 1
         tokens = np.zeros((1, c), np.int32)
         tokens[0, :n] = chunk_tokens
         q_pos = np.full((1, c), -1, np.int32)
@@ -518,6 +643,59 @@ class ContinuousEngine:
                 self._sample_and_advance(seq, logits[0])
             seq.state = DECODE
             self._maybe_finish(seq)
+
+    def _run_prefill_packed(self, segs, bucket):
+        """One ragged dispatch over up to ``max_batch`` segments' chunks
+        (DESIGN.md Sec. 16). The packed row concatenates each segment's
+        tokens (per-token seg ids route KV writes and gathers to the
+        segment's own pages), the bucket pads the row to a pre-compiled
+        length, and each segment's next-token logits come back at its
+        ``last_idx``. Post-dispatch bookkeeping is the unpacked path's, per
+        segment: commit, prefix registration, and sample-or-continue."""
+        t = bucket
+        s_max = self.max_batch
+        tokens = np.zeros((t,), np.int32)
+        seg_ids = np.full((t,), -1, np.int32)
+        q_pos = np.full((t,), -1, np.int32)
+        kv_lens = np.zeros((s_max,), np.int32)
+        slots = np.full((s_max,), -1, np.int32)
+        last_idx = np.zeros((s_max,), np.int32)
+        seg_off = np.zeros((s_max,), np.int32)
+        off = 0
+        for i, (seq, start, n) in enumerate(segs):
+            toks = seq.tokens
+            tokens[off:off + n] = toks[start:start + n]
+            seg_ids[off:off + n] = i
+            q_pos[off:off + n] = start + np.arange(n)
+            kv_lens[i] = start + n
+            slots[i] = seq.slot
+            seg_off[i] = off
+            last_idx[i] = off + n - 1
+            off += n
+        self.n_prefill_dispatches += 1
+        self.n_prefill_segments += len(segs)
+        if len(self.packed_segment_obs) < 4096:
+            self.packed_segment_obs.append(len(segs))
+        self.n_work_positions += t
+        bt = self.cache.table_rows([int(s) for s in slots])
+        logits, self.cache.pools = self._prefill_fn(
+            self.cache.pools, self.params, jnp.asarray(tokens),
+            jnp.asarray(seg_ids), jnp.asarray(q_pos), jnp.asarray(kv_lens),
+            bt, jnp.asarray(slots), jnp.asarray(last_idx),
+            jnp.asarray(seg_off))
+        self.n_host_syncs += 1          # blocking (S, vocab) logits fetch
+        logits = np.asarray(logits)
+        if self.faults.armed:
+            self.faults.fire("apply")   # device written, host not yet
+        for i, (seq, start, n) in enumerate(segs):
+            seq.cache_len = start + n
+            self.cache.commit(seq.slot, seq.cache_len)
+            self.cache.register_prefix(seq.slot, seq.tokens[:seq.cache_len])
+            if seq.cache_len == len(seq.tokens):    # prompt fully in cache
+                if not seq.is_done():               # e.g. max_new_tokens=0
+                    self._sample_and_advance(seq, logits[i])
+                seq.state = DECODE
+                self._maybe_finish(seq)
 
     def _decode_bucket(self, seqs):
         """Shared decode-batch shape policy: pad to the next power of two

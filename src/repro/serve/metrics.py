@@ -287,6 +287,34 @@ class ServeMetrics:
         self.prefix_hit_rate = r.gauge(
             "msb_prefix_hit_rate",
             "Fraction of admissions that hit the prefix cache")
+        # packed prefill + AOT warmup (DESIGN.md Sec. 16)
+        self.prefill_dispatches = r.counter(
+            "msb_prefill_dispatches_total",
+            "Prefill dispatches (packed waves count once, however many "
+            "segments they carry)")
+        self.prefill_segments = r.counter(
+            "msb_prefill_segments_total",
+            "Prompt segments prefetched across all prefill dispatches")
+        self.admission_waves = r.counter(
+            "msb_admission_waves_total",
+            "Scheduler admission waves that admitted at least one request")
+        self.packed_segments = r.histogram(
+            "msb_prefill_packed_segments",
+            "Segments per packed prefill dispatch",
+            buckets=(1, 2, 4, 8, 16, 32))
+        self.admission_depth = r.histogram(
+            "msb_admission_queue_depth",
+            "Waiting-queue depth at the start of each admission wave "
+            "(one observation per wave, not per chunk)",
+            buckets=(0, 1, 2, 4, 8, 16, 32, 64, 128))
+        self.warmup_seconds = r.counter(
+            "msb_warmup_seconds",
+            "Wall time spent in AOT trace warmup, summed across engine "
+            "incarnations")
+        self.traces_compiled = r.counter(
+            "msb_traces_compiled_total",
+            "Process-wide jitted-dispatch traces entered (the steady-state "
+            "serving delta after warmup should be zero)")
         # supervision (DESIGN.md Sec. 14) — zero-valued until a supervised
         # engine syncs, so dashboards can alert on them unconditionally
         self.restarts = r.counter(
@@ -312,7 +340,7 @@ class ServeMetrics:
             "msb_health_state",
             "One-hot server health (exactly one state is 1)",
             labelnames=("state",))
-        for s in ("ok", "degraded", "draining", "dead"):
+        for s in ("ok", "warming", "degraded", "draining", "dead"):
             self.health.set(1.0 if s == "ok" else 0.0, state=s)
         self._recovery_seen = 0       # recovery_log entries already observed
 
@@ -337,6 +365,22 @@ class ServeMetrics:
         self.prefix_positions_saved.set_to(st["prefix_positions_saved"])
         self.prefix_hit_rate.set(
             st["prefix_hits"] / max(st["admissions"], 1))
+        if "prefill_dispatches" in st:
+            self.prefill_dispatches.set_to(st["prefill_dispatches"])
+            self.prefill_segments.set_to(st["prefill_segments"])
+            self.admission_waves.set_to(st["admission_waves"])
+            self.warmup_seconds.set_to(st["warmup_seconds"])
+        # process-wide trace probe: module-level jits share their compile
+        # cache, so this ratchets even across sibling engines
+        from .continuous import jit_trace_count
+        self.traces_compiled.set_to(jit_trace_count())
+        drain = getattr(engine, "drain_observations", None)
+        if drain is not None:
+            obs = drain()
+            for d in obs.get("admission_queue_depth", ()):
+                self.admission_depth.observe(d)
+            for n in obs.get("packed_segments", ()):
+                self.packed_segments.observe(n)
         if "restarts" in st:          # supervised engine
             self.restarts.set_to(st["restarts"])
             self.watchdog_trips.set_to(st["watchdog_trips"])
@@ -348,7 +392,7 @@ class ServeMetrics:
             self.set_health(st["health"])
 
     def set_health(self, state: str):
-        for s in ("ok", "degraded", "draining", "dead"):
+        for s in ("ok", "warming", "degraded", "draining", "dead"):
             self.health.set(1.0 if s == state else 0.0, state=s)
 
     def render(self) -> str:

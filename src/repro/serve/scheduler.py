@@ -110,11 +110,19 @@ class Scheduler:
     def __init__(self, cache: PagedKVCache, max_batch: int,
                  prefill_chunk: int, decode_horizon: int = 1,
                  max_waiting: Optional[int] = None,
-                 oversubscribe: float = 2.0):
+                 oversubscribe: float = 2.0,
+                 prefill_buckets: Optional[Tuple[int, ...]] = None):
         self.cache = cache
         self.max_batch = max_batch
         self.prefill_chunk = prefill_chunk
         self.decode_horizon = int(decode_horizon)
+        # packed ragged prefill (DESIGN.md Sec. 16): when a bucket set is
+        # given, schedule() bins every waiting PREFILL sequence's next chunk
+        # into ONE dispatch padded to the smallest covering bucket; None
+        # keeps the classic one-chunk-per-sequence path
+        self.prefill_buckets = (tuple(sorted(int(b) for b in prefill_buckets))
+                                if prefill_buckets else None)
+        self.isolate_prefill = False    # one segment per wave when True
         # backpressure (None = unbounded queueing, the pre-server behavior):
         # max_waiting bounds the waiting queue; oversubscribe bounds the
         # outstanding page demand of admitted-but-unfinished work to a
@@ -128,9 +136,14 @@ class Scheduler:
         self._last_was_prefill = False
         self.n_preemptions = 0
         self.n_admissions = 0         # waiting -> running transitions
+        self.n_admission_waves = 0    # _admit() calls that admitted >= 1 seq
         self.n_aborts = 0             # requests cancelled before finishing
         self.n_prefix_hits = 0        # admissions that matched the registry
         self.n_prefix_tokens = 0      # positions adopted instead of prefilled
+        # one queue-depth sample per admission wave (NOT per prefill chunk:
+        # a long prompt's chunks would otherwise re-report the same depth
+        # dozens of times and skew the distribution); drained by the engine
+        self.queue_depth_obs: List[int] = []
 
     # -- queue entry points -------------------------------------------------
     def would_accept(self, n_tokens: int) -> Optional[Exception]:
@@ -173,6 +186,12 @@ class Scheduler:
         return None
 
     def submit(self, request: Request) -> Sequence:
+        # the HTTP layer rejects these with a 400; direct callers get the
+        # same contract here (there is no token to prefill, so the packed
+        # planner would never assign the sequence a segment)
+        if len(request.prompt) == 0:
+            raise ValueError(f"request {request.req_id}: prompt must not "
+                             "be empty (nothing to prefill)")
         total = len(request.prompt) + request.max_new_tokens
         err = self.would_accept(total)
         if err is not None:        # names the limit that actually rejected
@@ -221,6 +240,8 @@ class Scheduler:
         starts at the matched boundary, so chunked prefill skips them. The
         match is capped at ``len(tokens) - 1`` — the last position must be
         prefilled for real so the sampler has logits to advance on."""
+        depth_before = len(self.waiting)
+        admitted_before = self.n_admissions
         while (self.waiting and len(self.running) < self.max_batch
                and self.cache.n_free_slots > 0):
             seq = self.waiting[0]
@@ -245,6 +266,10 @@ class Scheduler:
                 self.n_prefix_tokens += match.n_tokens
             seq.state = PREFILL
             self.running.append(seq)
+        if self.n_admissions > admitted_before:
+            self.n_admission_waves += 1
+            if len(self.queue_depth_obs) < 4096:   # bounded if undrained
+                self.queue_depth_obs.append(depth_before)
 
     def _match_for(self, seq, toks):
         """match_prefix memoized per sequence on the registry epoch: a
@@ -324,10 +349,57 @@ class Scheduler:
         self._last_was_prefill = True
         return ("prefill", seq, toks[start:start + chunk], start)
 
+    def _try_prefill_packed(self):
+        """Pack every runnable PREFILL sequence's next chunk into one
+        dispatch (DESIGN.md Sec. 16): segments are assigned in running
+        (FIFO-admission) order under a token budget of the largest bucket,
+        each segment resuming at its own ``cache_len`` — so prefix-cache
+        adoptions pack at the matched boundary and a prompt longer than the
+        largest bucket simply continues across successive waves (chunking
+        falls out, no special case). Returns
+        ``("prefill_packed", [(seq, start, n), ...], bucket)`` with
+        ``bucket`` the smallest bucket covering the assigned tokens.
+
+        Reservation order is planning order; a reservation that preempts
+        evicts the *youngest* running sequence, which may be a segment
+        planned earlier in this very wave — the final membership filter
+        drops any segment preemption took back (its reservation was
+        released with its slot, so nothing leaks)."""
+        if not any(s.state == PREFILL for s in self.running):
+            return None
+        budget = self.prefill_buckets[-1]
+        # crash isolation (set by the supervisor after a crash blamed on a
+        # multi-segment packed dispatch): pack one segment per wave so
+        # blame — and poison quarantine — stays per-request precise
+        max_segs = 1 if self.isolate_prefill else self.max_batch
+        segs: List[Tuple[Sequence, int, int]] = []
+        used = 0
+        for seq in list(self.running):
+            if seq.state != PREFILL or seq not in self.running:
+                continue
+            if len(segs) >= max_segs or used >= budget:
+                break
+            start = seq.cache_len
+            n = min(budget - used, len(seq.tokens) - start)
+            if n <= 0:
+                continue
+            if not self._reserve_or_preempt(seq, start + n):
+                continue                   # self-preempted mid-wave
+            segs.append((seq, start, n))
+            used += n
+        segs = [s for s in segs if s[0] in self.running]
+        if not segs:
+            return None
+        used = sum(n for _, _, n in segs)
+        bucket = next(b for b in self.prefill_buckets if b >= used)
+        self._last_was_prefill = True
+        return ("prefill_packed", segs, bucket)
+
     # -- the policy ----------------------------------------------------------
     def schedule(self):
         """Return the next unit of work, or None when idle:
           ("prefill", seq, chunk_tokens (C,), start_pos)   — one chunk
+          ("prefill_packed", [(seq, start, n)], bucket)    — packed wave
           ("decode", [seqs])                               — packed batch
 
         Alternates prefill/decode when both exist; whichever kind is tried
@@ -339,7 +411,9 @@ class Scheduler:
         has_prefill = any(s.state == PREFILL for s in self.running)
         prefer_decode = has_decode and (not has_prefill
                                         or self._last_was_prefill)
-        order = (self._try_decode, self._try_prefill)
+        prefill = (self._try_prefill_packed if self.prefill_buckets
+                   else self._try_prefill)
+        order = (self._try_decode, prefill)
         if not prefer_decode:
             order = order[::-1]
         for attempt in order:

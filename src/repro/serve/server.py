@@ -57,8 +57,8 @@ from .lifecycle import (DONE, FINISH_CANCELLED, FINISH_ERROR, FINISH_LENGTH,
                         ValidationError, parse_completion_request)
 from .metrics import Registry, ServeMetrics
 from .scheduler import Saturated
-from .supervisor import DEAD, DEGRADED, DRAINING, OK, Draining, EngineDied, \
-    Recovering
+from .supervisor import DEAD, DEGRADED, DRAINING, OK, WARMING, Draining, \
+    EngineDied, Recovering, Warming
 
 
 def default_detokenize(token_id: int) -> str:
@@ -98,12 +98,14 @@ class EngineLoop:
     def __init__(self, engine, metrics: Optional[ServeMetrics] = None,
                  detokenize: Optional[Callable[[int], str]] = None,
                  idle_poll_s: float = 0.05, faults=NO_FAULTS,
-                 max_detok_restarts: int = 3):
+                 max_detok_restarts: int = 3, warmup: bool = False):
         self.engine = engine
         self.metrics = metrics or ServeMetrics()
         self.detokenize = detokenize or default_detokenize
         self.idle_poll_s = idle_poll_s
         self.faults = faults
+        self.warmup_requested = bool(warmup)
+        self.warming = False           # startup AOT warmup in flight
         self.max_detok_restarts = int(max_detok_restarts)
         self.n_detok_restarts = 0
         self.detok_dead = False        # restart budget exhausted
@@ -142,13 +144,16 @@ class EngineLoop:
 
     @property
     def health(self) -> str:
-        """``ok | degraded | draining | dead`` for ``/healthz``: dead/
-        draining are loop-level states; a supervised engine contributes
-        its own degraded/draining/dead states beneath them."""
+        """``ok | warming | degraded | draining | dead`` for ``/healthz``:
+        dead/draining/warming are loop-level states; a supervised engine
+        contributes its own warming/degraded/draining/dead states beneath
+        them."""
         if not self.alive:
             return DEAD
         if self.draining:
             return DRAINING
+        if self.warming:
+            return WARMING
         return getattr(self.engine, "health", OK)
 
     def drain(self):
@@ -173,6 +178,9 @@ class EngineLoop:
                               + (f": {self.died}" if self.died else ""))
         if self.draining:
             return Draining("server is draining; not accepting work")
+        if self.warming:
+            return Warming("engine is warming up (compiling the trace "
+                           "set); retry shortly")
         return self.engine.would_accept(prompt_len, max_tokens)
 
     def submit(self, lc: RequestLifecycle) -> asyncio.Future:
@@ -193,6 +201,15 @@ class EngineLoop:
     # -- engine thread ------------------------------------------------------
     def _run(self):
         try:
+            if self.warmup_requested and hasattr(self.engine, "warmup"):
+                # AOT-compile the reachable trace set before accepting
+                # work; probe/healthz answer Warming/503 until done
+                self.warming = True
+                try:
+                    self.engine.warmup()
+                finally:
+                    self.warming = False
+                self.metrics.sync_engine(self.engine)
             while not self._stop.is_set():
                 busy = self.engine.has_work
                 self._drain_cmds(block=not busy)
@@ -410,7 +427,8 @@ class APIServer:
                  detokenize: Optional[Callable[[int], str]] = None,
                  default_max_tokens: int = 16, max_tokens_cap: int = 2048,
                  max_timeout_s: Optional[float] = None,
-                 retry_after_s: float = 1.0, faults=NO_FAULTS):
+                 retry_after_s: float = 1.0, faults=NO_FAULTS,
+                 warmup: bool = False):
         self.host, self.port = host, port
         model = getattr(engine, "engine", engine).model  # unwrap supervisor
         self.model_name = model_name or model.cfg.name
@@ -421,7 +439,8 @@ class APIServer:
         self.retry_after_s = retry_after_s
         self.faults = faults
         self.engine_loop = EngineLoop(engine, metrics=metrics,
-                                      detokenize=detokenize, faults=faults)
+                                      detokenize=detokenize, faults=faults,
+                                      warmup=warmup)
         self.metrics = self.engine_loop.metrics
         self._loop: Optional[asyncio.AbstractEventLoop] = None
         self._shutdown: Optional[asyncio.Event] = None
@@ -568,9 +587,17 @@ class APIServer:
                 for k in ("restarts", "watchdog_trips", "quarantined"):
                     if k in st:
                         body[k] = st[k]
-            # ok/degraded keep serving (200); draining/dead do not (503)
-            return await self._send_json(
-                writer, 200 if health in (OK, DEGRADED) else 503, body)
+            # ok/degraded keep serving (200); warming/draining/dead do
+            # not (503) — warming adds Retry-After (transient, like a
+            # recovery window) so probes know to re-check, not evict
+            if health in (OK, DEGRADED):
+                return await self._send_json(writer, 200, body)
+            extra = ()
+            if health == WARMING:
+                extra = ((b"Retry-After",
+                          str(int(math.ceil(self.retry_after_s)))
+                          .encode()),)
+            return await self._send_json(writer, 503, body, extra=extra)
         if path == "/v1/models":
             return await self._send_json(writer, 200, {
                 "object": "list",
@@ -639,6 +666,14 @@ class APIServer:
             # after a crash — distinct from saturation so load balancers
             # can tell "shed load" from "replica briefly down" (503)
             self.metrics.requests.inc(outcome="recovering")
+            return await self._send_json(
+                writer, 503, _err(str(err), "unavailable_error"),
+                extra=retry)
+        if isinstance(err, Warming):
+            # transient, like Recovering: startup warmup is compiling the
+            # trace set — the replica will accept shortly (503 + Retry-
+            # After, distinct outcome so dashboards can tell them apart)
+            self.metrics.requests.inc(outcome="warming")
             return await self._send_json(
                 writer, 503, _err(str(err), "unavailable_error"),
                 extra=retry)

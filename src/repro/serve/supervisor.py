@@ -27,12 +27,20 @@ boundary the ROADMAP's north star requires:
     blows the deadline is declared hung: the worker is abandoned (it can
     no longer touch shared state) and recovery proceeds as for a crash.
   * **Poison quarantine.** Each crash blames the requests in the work
-    unit that was stepping (a prefill blames one sequence; a decode
-    blames the batch; a pre-schedule crash blames every running
-    sequence). A request blamed ``max_crashes_per_request`` times is
-    quarantined: it fails with ``PoisonedRequest`` (surfaced as a 500
-    naming the cause) instead of crashing the engine a fourth time — the
-    cohort survives.
+    unit that was stepping (a prefill chunk blames one sequence; a
+    packed prefill or decode blames the batch; a pre-schedule crash
+    blames every running sequence). A request blamed
+    ``max_crashes_per_request`` times is quarantined: it fails with
+    ``PoisonedRequest`` (surfaced as a 500 naming the cause) instead of
+    crashing the engine a fourth time — the cohort survives. A crash
+    blamed on a *multi-segment packed prefill* additionally switches
+    every later incarnation to one-segment prefill waves (crash
+    isolation), so repeat blame — and therefore quarantine — lands on
+    the poisoned request alone, never on innocent packing neighbors.
+  * **Warmup.** ``warmup()`` AOT-compiles the incarnation's reachable
+    trace set (``serve.warmup``), surfacing ``warming`` health /
+    ``Warming`` (503 + Retry-After) while it runs; once requested, every
+    rebuilt incarnation re-warms inside its recovery window.
   * **Drain.** ``drain()`` stops admissions (``Draining`` -> HTTP 503)
     while in-flight work runs to completion; ``drained`` flips when the
     engine is empty. Wired to SIGTERM via ``train.fault
@@ -60,7 +68,7 @@ from ..train.fault import StragglerMonitor
 from .scheduler import Saturated
 
 __all__ = ["Draining", "EngineDied", "EngineSupervisor", "PoisonedRequest",
-           "Recovering", "WatchdogTimeout"]
+           "Recovering", "Warming", "WatchdogTimeout"]
 
 
 class EngineDied(RuntimeError):
@@ -91,8 +99,15 @@ class Recovering(RuntimeError):
     (transient — retry this replica shortly)."""
 
 
+class Warming(RuntimeError):
+    """Admissions are closed while startup AOT warmup compiles the
+    reachable trace set (``serve.warmup``). Maps to HTTP 503 +
+    Retry-After, like ``Recovering`` — transient, retry shortly."""
+
+
 # health states, in increasing order of trouble
-OK, DEGRADED, DRAINING, DEAD = "ok", "degraded", "draining", "dead"
+OK, WARMING, DEGRADED, DRAINING, DEAD = (
+    "ok", "warming", "degraded", "draining", "dead")
 
 
 class _SupReq:
@@ -176,6 +191,9 @@ class EngineSupervisor:
         self._failures: Dict[int, Exception] = {}
         self._finished_out: Dict[int, np.ndarray] = {}
         self._recovering = False
+        self._warming = False       # startup/rebuild AOT warmup in flight
+        self._warmed = False        # warmup() was requested: re-warm rebuilds
+        self._isolate_prefill = False   # crash blamed on a packed prefill
         self._dead: Optional[Exception] = None
         self.draining = False
         self._degraded_until = 0.0
@@ -197,6 +215,8 @@ class EngineSupervisor:
             return DEAD
         if self.draining:
             return DRAINING
+        if self._warming:
+            return WARMING
         if (self._recovering or self._pending_replay
                 or time.monotonic() < self._degraded_until):
             return DEGRADED
@@ -213,6 +233,9 @@ class EngineSupervisor:
                               f"{self._dead}")
         if self.draining:
             return Draining("server is draining; not accepting work")
+        if self._warming:
+            return Warming("engine is warming up (compiling the trace "
+                           "set); retry shortly")
         if self._recovering or self._pending_replay:
             return Recovering("engine is recovering from a crash; "
                               "retry shortly")
@@ -241,10 +264,28 @@ class EngineSupervisor:
                               f"{self.n_restarts} restarts: {self._dead}")
         if self.draining:
             return Draining("server is draining; not accepting work")
+        if self._warming:
+            return Warming("engine is warming up (compiling the trace "
+                           "set); retry shortly")
         if self._recovering or self._pending_replay:
             return Recovering("engine is recovering from a crash; "
                               "retry shortly")
         return None
+
+    def warmup(self):
+        """AOT-warm the current incarnation's reachable trace set
+        (``ContinuousEngine.warmup``). While it runs, health reads
+        ``warming`` and admissions get ``Warming`` (503 + Retry-After).
+        Once requested, every rebuilt incarnation re-warms inside its
+        recovery window, so steady-state serving stays trace-free across
+        crashes too."""
+        self._warming = True
+        try:
+            report = self.engine.warmup()
+        finally:
+            self._warming = False
+        self._warmed = True
+        return report
 
     # -- the supervised step -------------------------------------------------
     @property
@@ -337,6 +378,17 @@ class EngineSupervisor:
                         if not sr.finished and sr.error is None
                         and not sr.aborted]
             self.engine = self._factory()
+            if self._isolate_prefill:
+                # a previous crash was blamed on a multi-segment packed
+                # prefill: pack one segment per wave from here on so blame
+                # (and poison quarantine) is per-request precise
+                self.engine.scheduler.isolate_prefill = True
+            if self._warmed:
+                self._warming = True
+                try:
+                    self.engine.warmup()    # re-warm: per-incarnation traces
+                finally:
+                    self._warming = False
             if self.watchdog_enabled:
                 self._worker = _StepWorker(self.engine)
             self._steps_this_incarnation = 0
@@ -356,6 +408,10 @@ class EngineSupervisor:
         crash before scheduling — or a hang, where the worker's state is
         not trusted — blames every running sequence (best-effort)."""
         blamed = tuple(getattr(self.engine, "last_step_rids", ()) or ())
+        if (len(blamed) > 1 and not isinstance(cause, WatchdogTimeout)
+                and getattr(self.engine, "last_step_kind", "")
+                == "prefill_packed"):
+            self._isolate_prefill = True    # applied to rebuilt incarnations
         if not blamed or isinstance(cause, WatchdogTimeout):
             blamed = tuple(s.req.req_id
                            for s in self.engine.scheduler.running)
@@ -539,6 +595,13 @@ class EngineSupervisor:
         )
         return out
 
+    def drain_observations(self):
+        """Passthrough of ``ContinuousEngine.drain_observations`` (bounded
+        per-event samples for metrics histograms). Samples buffered inside
+        a crashed incarnation are lost with it — they are observability,
+        not accounting."""
+        return self.engine.drain_observations()
+
     # passthrough conveniences for tests / benches
     @property
     def scheduler(self):
@@ -553,7 +616,9 @@ class EngineSupervisor:
 # supervisor's cross-incarnation accumulator
 _ENGINE_COUNTERS = ("tokens_out", "steps", "decode_steps", "host_syncs",
                     "work_positions", "aborts", "preemptions", "admissions",
-                    "prefix_hits", "prefix_positions_saved", "forks")
+                    "prefix_hits", "prefix_positions_saved", "forks",
+                    "prefill_dispatches", "prefill_segments",
+                    "admission_waves", "warmup_seconds", "warmup_traces")
 
 
 class _StepWorker:

@@ -118,8 +118,10 @@ def test_api_server_chaos_streams_byte_identical(qsetup):
     request hangs. Clients retry on 503 (recovery window) and 429."""
     model, params = qsetup
     refs = _reference(model, params, PROMPTS)
+    # spread sized to the packed-prefill cadence: one dispatch covers a
+    # whole admission wave, so the run reaches fewer step/apply indices
     plan = FaultPlan.seeded(42, n_faults=8, sites=("step", "apply", "alloc"),
-                            first=2, spread=25, stall_s=0.02)
+                            first=2, spread=15, stall_s=0.02)
     sup = EngineSupervisor(
         lambda: _engine(model, params, faults=plan, max_waiting=32),
         watchdog=False, max_crashes_per_request=100)

@@ -1,0 +1,268 @@
+"""Packed ragged prefill (DESIGN.md Sec. 16): bucket edge cases, packing x
+preemption / prefix-cache / abort interactions, AOT warmup's zero-retrace
+guarantee, the per-wave queue-depth observation, and the segment-masked
+flash-attention kernel against its full-softmax oracle.
+"""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import smoke_config
+from repro.kernels.flash_attention.flash_attention import flash_attention_fwd
+from repro.kernels.flash_attention.ref import flash_attention_segmented_ref
+from repro.models import Model
+from repro.serve import ContinuousEngine, jit_trace_count
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = smoke_config("internlm2-1.8b")
+    cfg = dataclasses.replace(cfg, vocab_size=64, vocab_round=64)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    params = jax.tree_util.tree_map(lambda p: p.astype(jnp.float32), params)
+    return model, params
+
+
+def _run(model, params, requests, **kw):
+    eng = ContinuousEngine(model, params, **kw)
+    rids = [eng.submit(p, n) for p, n in requests]
+    out = eng.run()
+    toks = [out[r].tolist() for r in rids]
+    return toks, eng
+
+
+# ---------------------------------------------------------------------------
+# bucket edge cases
+# ---------------------------------------------------------------------------
+
+def test_prompt_longer_than_largest_bucket_chunks_across_waves(setup, rng):
+    """A 40-token prompt against buckets (4, 8, 16) cannot fit one wave:
+    it must continue across successive waves (chunking falls out of the
+    per-segment cache_len resume — no special case), and the output stays
+    token-identical to the unpacked chunked path."""
+    model, params = setup
+    prompt = rng.integers(0, 64, (40,)).astype(np.int32)
+    kw = dict(max_batch=4, page_size=4, num_pages=64, max_seq=48,
+              prefill_chunk=4, prefix_cache=False)
+    ref, _ = _run(model, params, [(prompt, 6)], prefill_packing=False, **kw)
+    toks, eng = _run(model, params, [(prompt, 6)], prefill_packing=True, **kw)
+    assert toks == ref
+    # ceil(40 / 16) waves, each one dispatch
+    assert eng.stats()["prefill_dispatches"] == 3
+    assert eng.drain_observations()["packed_segments"] == [1, 1, 1]
+    eng.close()
+
+
+def test_single_short_prompt_one_dispatch(setup, rng):
+    """One 5-token prompt: a single packed dispatch (padded to the smallest
+    covering bucket), one segment observed, identical tokens."""
+    model, params = setup
+    prompt = rng.integers(0, 64, (5,)).astype(np.int32)
+    kw = dict(max_batch=4, page_size=4, num_pages=64, max_seq=32,
+              prefill_chunk=8, prefix_cache=False)
+    ref, _ = _run(model, params, [(prompt, 8)], prefill_packing=False, **kw)
+    toks, eng = _run(model, params, [(prompt, 8)], prefill_packing=True, **kw)
+    assert toks == ref
+    st = eng.stats()
+    assert st["prefill_dispatches"] == 1 and st["prefill_segments"] == 1
+    assert eng.drain_observations()["packed_segments"] == [1]
+    eng.close()
+
+
+def test_packing_with_preemption_token_identical(setup, rng):
+    """A pool too small for the whole working set forces preemption by
+    recompute mid-run; packed prefill must replay evicted segments at their
+    reset cache_len and keep greedy output identical to a roomy engine."""
+    model, params = setup
+    requests = [(rng.integers(0, 64, (int(n),)).astype(np.int32), 10)
+                for n in rng.integers(5, 12, (4,))]
+    ref, _ = _run(model, params, requests, prefill_packing=False,
+                  max_batch=4, page_size=4, num_pages=64, max_seq=32,
+                  prefix_cache=False)
+    toks, eng = _run(model, params, requests, prefill_packing=True,
+                     max_batch=4, page_size=4, num_pages=14, max_seq=32,
+                     prefix_cache=False)
+    assert toks == ref
+    assert eng.scheduler.n_preemptions > 0, "pool was not small enough"
+    eng.cache.check_invariants(expect_idle=True)
+    eng.close()
+
+
+def test_prefix_adoption_packs_at_resumed_boundary(setup, rng):
+    """A request adopting a cached prefix enters the packed wave at its
+    matched boundary (cache_len > 0) alongside a cold request starting at
+    0 — both in one dispatch, tokens identical to a cache-less engine."""
+    model, params = setup
+    base = rng.integers(0, 64, (12,)).astype(np.int32)
+    warm = np.concatenate([base, rng.integers(0, 64, (4,))]).astype(np.int32)
+    cold = rng.integers(0, 64, (7,)).astype(np.int32)
+    kw = dict(max_batch=4, page_size=4, num_pages=64, max_seq=32,
+              prefill_chunk=8)
+    ref, _ = _run(model, params, [(base, 6), (warm, 6), (cold, 6)],
+                  prefill_packing=False, prefix_cache=False, **kw)
+
+    eng = ContinuousEngine(model, params, prefill_packing=True,
+                           prefix_cache=True, **kw)
+    r0 = eng.submit(base, 6)
+    first = eng.run()                       # populates the prefix registry
+    d0 = eng.stats()["prefill_dispatches"]
+    r1, r2 = eng.submit(warm, 6), eng.submit(cold, 6)
+    out = eng.run()
+    st = eng.stats()
+    assert [first[r0].tolist(), out[r1].tolist(), out[r2].tolist()] == ref
+    assert st["prefix_hits"] >= 1, "warm request missed the registry"
+    # the warm+cold wave is ONE dispatch carrying both segments
+    assert st["prefill_dispatches"] == d0 + 1
+    assert 2 in eng.drain_observations()["packed_segments"]
+    eng.close()
+
+
+def test_empty_prompt_rejected_at_submit(setup):
+    """An empty prompt has nothing to prefill, so the packed planner would
+    never assign it a segment (it would sit admitted-but-starved forever);
+    submit rejects it up front — same contract as the HTTP 400."""
+    model, params = setup
+    eng = ContinuousEngine(model, params, max_batch=4, page_size=4,
+                           num_pages=32, max_seq=16, prefill_chunk=4)
+    with pytest.raises(ValueError, match="empty"):
+        eng.submit(np.asarray([], np.int32), 4)
+    assert not eng.scheduler.has_work
+    eng.close()
+
+
+def test_abort_mid_packed_prefill_leaks_nothing(setup, rng):
+    """Abort a segment whose prompt is still mid-prefill after the first
+    packed wave: its leased pages are released, the surviving requests
+    finish token-identically, and the pool audits clean."""
+    model, params = setup
+    a = rng.integers(0, 64, (6,)).astype(np.int32)
+    b = rng.integers(0, 64, (20,)).astype(np.int32)     # > largest bucket
+    c = rng.integers(0, 64, (5,)).astype(np.int32)
+    kw = dict(max_batch=4, page_size=4, num_pages=64, max_seq=32,
+              prefill_chunk=4, prefix_cache=False)
+    ref, _ = _run(model, params, [(a, 6), (c, 6)],
+                  prefill_packing=False, **kw)
+
+    eng = ContinuousEngine(model, params, prefill_packing=True, **kw)
+    ra, rb, rc = eng.submit(a, 6), eng.submit(b, 6), eng.submit(c, 6)
+    assert eng.step()                       # first packed wave runs a + b
+    sb = eng._seqs[rb]
+    assert 0 < sb.cache_len < len(b), "b should be mid-prefill"
+    assert eng.abort_request(rb)
+    out = eng.run()
+    assert rb not in out
+    assert [out[ra].tolist(), out[rc].tolist()] == ref
+    eng.cache.check_invariants(expect_idle=True)        # zero leaked pages
+    eng.close()
+
+
+# ---------------------------------------------------------------------------
+# warmup + observations
+# ---------------------------------------------------------------------------
+
+def test_warmup_then_zero_new_traces(setup, rng):
+    """After warmup() every reachable dispatch shape is compiled: a mixed
+    serving run (packed prefill waves, decode-horizon buckets, a prompt
+    longer than the largest bucket) performs zero new jit traces."""
+    model, params = setup
+    eng = ContinuousEngine(model, params, max_batch=4, page_size=4,
+                           num_pages=64, max_seq=48, prefill_chunk=4,
+                           decode_horizon=8, prefix_cache=False)
+    report = eng.warmup()
+    # 3 prefill buckets + decode-horizon batch buckets (1, 2, 4)
+    assert report["entries"] == 6
+    assert eng.stats()["warmup_traces"] == 6
+    assert eng.stats()["warmup_seconds"] > 0
+    n0 = jit_trace_count()
+    requests = [(rng.integers(0, 64, (int(n),)).astype(np.int32), 9)
+                for n in (3, 7, 20, 11)]
+    rids = [eng.submit(p, n) for p, n in requests]
+    out = eng.run()
+    assert sorted(out) == sorted(rids)
+    assert jit_trace_count() == n0, "steady-state serving retraced"
+    eng.close()
+
+
+def test_one_queue_depth_observation_per_admission_wave(setup, rng):
+    """The scheduler reports queue depth once per admitting wave — not once
+    per prefill chunk — so a long prompt's many chunks cannot skew the
+    admission-depth histogram."""
+    model, params = setup
+    eng = ContinuousEngine(model, params, max_batch=8, page_size=4,
+                           num_pages=64, max_seq=32, prefill_chunk=4,
+                           prefix_cache=False)
+    for _ in range(4):
+        eng.submit(rng.integers(0, 64, (10,)).astype(np.int32), 4)
+    eng.run()
+    obs = eng.drain_observations()
+    assert obs["admission_queue_depth"] == [4]        # one wave, depth 4
+    assert eng.stats()["admission_waves"] == 1
+    for _ in range(2):
+        eng.submit(rng.integers(0, 64, (6,)).astype(np.int32), 4)
+    eng.run()
+    assert eng.drain_observations()["admission_queue_depth"] == [2]
+    assert eng.stats()["admission_waves"] == 2
+    eng.close()
+
+
+# ---------------------------------------------------------------------------
+# segment-masked flash attention vs oracle
+# ---------------------------------------------------------------------------
+
+def _segmented_inputs(rng, b=1, h=4, kv=2, s=128, d=32):
+    q = jnp.asarray(rng.standard_normal((b, h, s, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, kv, s, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, kv, s, d)), jnp.float32)
+    # three contiguous segments + trailing pads, crossing the 64-tile edge
+    segs = jnp.asarray(np.repeat([0, 1, 2, -1], [50, 30, 40, 8])[None, :],
+                       jnp.int32)
+    return q, k, v, segs
+
+
+@pytest.mark.parametrize("causal,softcap", [(True, 0.0), (False, 0.0),
+                                            (True, 30.0)])
+def test_flash_segmented_matches_oracle(rng, causal, softcap):
+    q, k, v, segs = _segmented_inputs(rng)
+    o_k = flash_attention_fwd(q, k, v, segs, segs, causal=causal,
+                              softcap=softcap, bq=64, bkv=64, interpret=True)
+    o_r = flash_attention_segmented_ref(q, k, v, segs, segs, causal=causal,
+                                        softcap=softcap)
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r),
+                               atol=2e-5, rtol=1e-4)
+
+
+def test_flash_segmented_pad_rows_exactly_zero(rng):
+    q, k, v, segs = _segmented_inputs(rng)
+    o = np.asarray(flash_attention_fwd(q, k, v, segs, segs, causal=True,
+                                       bq=64, bkv=64, interpret=True))
+    assert np.all(o[:, :, 120:] == 0.0), "pad (-1) rows must output zero"
+    assert np.all(np.isfinite(o))
+
+
+def test_flash_segmented_cross_segment_isolation_bitwise(rng):
+    """Perturbing another segment's K/V must leave this segment's output
+    bit-identical — cross-segment attention is structurally zero, not just
+    numerically small."""
+    q, k, v, segs = _segmented_inputs(rng)
+    o1 = np.asarray(flash_attention_fwd(q, k, v, segs, segs, causal=True,
+                                        bq=64, bkv=64, interpret=True))
+    k2 = k.at[:, :, 50:80].multiply(-3.0)       # segment 1's keys
+    v2 = v.at[:, :, 50:80].add(7.0)
+    o2 = np.asarray(flash_attention_fwd(q, k2, v2, segs, segs, causal=True,
+                                        bq=64, bkv=64, interpret=True))
+    np.testing.assert_array_equal(o1[:, :, :50], o2[:, :, :50])     # seg 0
+    np.testing.assert_array_equal(o1[:, :, 80:120], o2[:, :, 80:120])
+    assert np.any(o1[:, :, 50:80] != o2[:, :, 50:80])   # seg 1 did change
+
+
+def test_segment_args_must_come_in_pairs(rng):
+    from repro.kernels.flash_attention.ops import attention
+    q, k, v, segs = _segmented_inputs(rng)
+    with pytest.raises(ValueError, match="both"):
+        flash_attention_fwd(q, k, v, segs, None, interpret=True)
+    with pytest.raises(ValueError, match="both"):
+        attention(q, k, v, kv_segs=segs, use_kernel=False)
