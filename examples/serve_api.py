@@ -143,6 +143,9 @@ def _await_warm(srv, host, port, timeout=600.0):
         time.sleep(0.05)
     status, body, _ = _healthz(host, port)
     assert status == 200 and body["status"] == "ok", body
+    # with the overload controller attached, an unloaded server reports
+    # the brownout ladder parked at level 0
+    assert body.get("brownout_level", 0) == 0, body
 
 
 def self_check(srv, host, port, metrics_out):
@@ -207,6 +210,7 @@ def self_check(srv, host, port, metrics_out):
     assert "msb_ttft_seconds_count" in scrape
     assert "msb_warmup_seconds" in scrape
     assert "msb_traces_compiled_total" in scrape
+    assert "msb_brownout_level" in scrape
     if metrics_out:
         with open(metrics_out, "w") as f:
             f.write(scrape)
@@ -345,7 +349,7 @@ def main():
     engine = build_engine()
     srv = APIServer(engine, host=args.host,
                     port=0 if args.self_check else args.port,
-                    max_timeout_s=300.0, warmup=True)
+                    max_timeout_s=300.0, warmup=True, overload=True)
     if not args.self_check:
         srv.run()                               # blocks until interrupted
         return

@@ -1,10 +1,12 @@
 from .continuous import ContinuousEngine, jit_trace_count
 from .engine import ServeEngine
-from .faults import NO_FAULTS, FaultEvent, FaultPlan, InjectedFault, \
-    InjectedOOM
-from .lifecycle import (CompletionParams, RequestLifecycle, ValidationError,
-                        parse_completion_request)
+from .faults import NO_FAULTS, FaultEvent, FaultPlan, InjectedControlFault, \
+    InjectedFault, InjectedOOM
+from .lifecycle import (PRIORITY_CLASSES, CompletionParams, RequestLifecycle,
+                        ValidationError, parse_completion_request)
 from .metrics import Counter, Gauge, Histogram, Registry, ServeMetrics
+from .overload import (DEFAULT_LADDER, BrownoutLevel, OverloadController,
+                       compute_retry_after)
 from .paged_cache import (OutOfPages, PagedKVCache, PageStateError,
                           PrefixMatch)
 from .scheduler import Request, Saturated, Scheduler, Sequence
@@ -14,13 +16,15 @@ from .supervisor import (Draining, EngineDied, EngineSupervisor,
                          WatchdogTimeout)
 from .warmup import enumerate_traces, warm_engine
 
-__all__ = ["APIServer", "CompletionParams", "ContinuousEngine", "Counter",
-           "Draining", "EngineDied", "EngineLoop", "EngineSupervisor",
-           "FaultEvent", "FaultPlan", "Gauge", "Histogram", "InjectedFault",
-           "InjectedOOM", "NO_FAULTS", "OutOfPages", "PagedKVCache",
+__all__ = ["APIServer", "BrownoutLevel", "CompletionParams",
+           "ContinuousEngine", "Counter", "DEFAULT_LADDER", "Draining",
+           "EngineDied", "EngineLoop", "EngineSupervisor", "FaultEvent",
+           "FaultPlan", "Gauge", "Histogram", "InjectedControlFault",
+           "InjectedFault", "InjectedOOM", "NO_FAULTS", "OutOfPages",
+           "OverloadController", "PRIORITY_CLASSES", "PagedKVCache",
            "PageStateError", "PoisonedRequest", "PrefixMatch", "Recovering",
            "Registry", "Request", "RequestLifecycle", "Saturated",
            "Scheduler", "Sequence", "ServeEngine", "ServeMetrics",
            "ValidationError", "Warming", "WatchdogTimeout",
-           "enumerate_traces", "jit_trace_count", "parse_completion_request",
-           "warm_engine"]
+           "compute_retry_after", "enumerate_traces", "jit_trace_count",
+           "parse_completion_request", "warm_engine"]

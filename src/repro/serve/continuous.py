@@ -60,6 +60,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -355,7 +356,9 @@ class ContinuousEngine:
         self._horizon_fn = jax.jit(hfn, donate_argnums=donate)
 
     # -- API ----------------------------------------------------------------
-    def submit(self, prompt, max_new_tokens, eos_id=None) -> int:
+    def submit(self, prompt, max_new_tokens, eos_id=None,
+               priority="standard", deadline_ms=None,
+               deadline_at=None) -> int:
         """Enqueue one request; returns its id (the ``collect()`` key).
 
         Non-blocking and device-free: nothing is scheduled or transferred
@@ -364,26 +367,41 @@ class ContinuousEngine:
         an accepted request is guaranteed to eventually complete, through
         preemption if need be), and ``Saturated`` when backpressure is on
         (``max_waiting=``) and the waiting queue or page-demand bound is
-        exceeded — a transient condition the caller should retry (HTTP
-        429). Generation stops after ``max_new_tokens`` or on the first
-        ``eos_id`` (which is included in the output).
+        exceeded, or a brownout level sheds ``priority``'s class — a
+        transient condition the caller should retry (HTTP 429). Generation
+        stops after ``max_new_tokens`` or on the first ``eos_id`` (which is
+        included in the output).
+
+        ``priority`` ("interactive" | "standard" | "batch") orders
+        admission, preemption victims and brownout shedding (DESIGN.md
+        Sec. 17); ``deadline_ms`` (relative, from now) orders admission
+        within the class (EDF) and protects a nearly-due sequence from
+        preemption — it never aborts work. ``deadline_at`` is the absolute
+        ``time.monotonic()`` form the supervisor uses on replay so a crash
+        does not extend a request's deadline.
         """
         req_id = self._next_id
         self._next_id += 1
+        now = time.monotonic()
+        if deadline_at is None and deadline_ms is not None:
+            deadline_at = now + float(deadline_ms) / 1000.0
         req = Request(req_id, np.asarray(prompt, np.int32).reshape(-1),
-                      int(max_new_tokens), eos_id)
+                      int(max_new_tokens), eos_id, priority=priority,
+                      deadline=deadline_at, submitted_at=now)
         self._seqs[req_id] = self.scheduler.submit(req)
         return req_id
 
-    def would_accept(self, prompt_len, max_new_tokens) -> Optional[Exception]:
+    def would_accept(self, prompt_len, max_new_tokens,
+                     priority="standard") -> Optional[Exception]:
         """Mutation-free admission probe: ``None`` when a ``submit`` of this
         size issued right now would be accepted, else the exception it would
         raise (``ValueError`` = can never fit, ``scheduler.Saturated`` =
-        busy, retry later). Safe to call from a thread other than the one
-        driving ``step()`` — it only reads counters, and ``submit``
-        re-validates, so a stale answer costs one exception, never state."""
-        return self.scheduler.would_accept(int(prompt_len)
-                                           + int(max_new_tokens))
+        busy or class shed under brownout, retry later). Safe to call from
+        a thread other than the one driving ``step()`` — it only reads
+        counters, and ``submit`` re-validates, so a stale answer costs one
+        exception, never state."""
+        return self.scheduler.would_accept(
+            int(prompt_len) + int(max_new_tokens), priority=priority)
 
     def step(self) -> bool:
         """Run one scheduler-chosen unit of work (one prefill chunk or one
@@ -457,7 +475,9 @@ class ContinuousEngine:
             new_id = self._next_id
             self._next_id += 1
             req = Request(new_id, seq.tokens.copy(), budget,
-                          seq.req.eos_id if eos_id is None else eos_id)
+                          seq.req.eos_id if eos_id is None else eos_id,
+                          priority=seq.req.priority,
+                          submitted_at=time.monotonic())
             child = Sequence(req)
             dst = self.cache.fork(seq.slot) if seq.slot >= 0 else None
             if dst is not None:
@@ -564,6 +584,9 @@ class ContinuousEngine:
             "admission_waves": s.n_admission_waves,
             "warmup_seconds": self.warmup_seconds,
             "warmup_traces": self.warmup_entries,
+            "preemptions_by_class": dict(s.n_preemptions_by_class),
+            "admissions_by_class": dict(s.n_admissions_by_class),
+            "sheds_by_class": dict(s.n_sheds_by_class),
             "queue_depth": len(s.waiting),
             "running": len(s.running),
         }
@@ -746,13 +769,19 @@ class ContinuousEngine:
         incremental over newly filled pages), and finish/eos semantics are
         unchanged because ``valid`` row masks are exact prefix masks."""
         h = self.decode_horizon
+        # brownout horizon clamp (DESIGN.md Sec. 17): the *static* trace
+        # horizon h never changes — a reduced effective horizon only lowers
+        # the dynamic per-row budget below, so the same compiled scan
+        # retires fewer tokens per dispatch. Schedule-only, trace-free,
+        # and token-identical (greedy output is horizon-independent).
+        eff = self.scheduler.effective_horizon
         b, slots, tokens = self._decode_bucket(seqs)
         start_pos = np.full((b,), -1, np.int32)
         n_left = np.zeros((b,), np.int32)
         eos = np.full((b,), -1, np.int32)
         for i, seq in enumerate(seqs):
             start_pos[i] = seq.n_total - 1
-            n_left[i] = seq.req.max_new_tokens - len(seq.generated)
+            n_left[i] = min(seq.req.max_new_tokens - len(seq.generated), eff)
             if seq.req.eos_id is not None:
                 eos[i] = seq.req.eos_id
         self.n_work_positions += b * h

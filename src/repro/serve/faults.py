@@ -30,10 +30,21 @@ Sites (where ``fire(site)`` is called):
   * ``"socket"`` — per token-bearing SSE frame in the HTTP stream writer.
     A crash drops the client connection mid-stream, exercising the
     disconnect -> abort -> page-release path under load.
+  * ``"controller"`` — top of ``OverloadController.tick()``. The control
+    plane has its own failure modes: a stuck pressure signal pinning the
+    ladder at max brownout (``kind="stuck"``), or a signal oscillating
+    between extremes every tick trying to make the ladder flap
+    (``kind="flap"``). Both raise ``InjectedControlFault``, which the
+    controller *catches* and converts into a forced pressure override —
+    the chaos test then asserts the hysteresis guard still bounds the
+    transition rate and the server drains cleanly. A plain ``crash``
+    here is also caught: a controller failure must never take down the
+    engine loop, it just holds the current level (fail-safe).
 
 Kinds: ``"crash"`` raises ``InjectedFault``; ``"oom"`` raises
 ``InjectedOOM``; ``"stall"`` sleeps ``stall_s`` then returns (the step
-completes, late — what a watchdog must catch).
+completes, late — what a watchdog must catch); ``"stuck"``/``"flap"``
+(controller site only) raise ``InjectedControlFault``.
 
 The default is a shared no-op plan (``NO_FAULTS``): one attribute check
 per site call, no lock, no allocation — production pays nothing.
@@ -49,8 +60,11 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 from .paged_cache import OutOfPages
 
-SITES = ("step", "apply", "alloc", "detok", "socket")
-KINDS = ("crash", "oom", "stall")
+SITES = ("step", "apply", "alloc", "detok", "socket", "controller")
+KINDS = ("crash", "oom", "stall", "stuck", "flap")
+# kinds that only make sense at the controller site (pressure overrides,
+# not exceptions that escape) — and the only non-crash kinds it accepts
+_CONTROLLER_KINDS = ("stuck", "flap", "crash")
 
 
 class InjectedFault(RuntimeError):
@@ -63,6 +77,18 @@ class InjectedOOM(OutOfPages):
     """A FaultPlan-scheduled allocator failure. An ``OutOfPages`` subtype
     so the scheduler's preemption path handles it identically to real
     pool exhaustion."""
+
+
+class InjectedControlFault(RuntimeError):
+    """A FaultPlan-scheduled control-plane fault. ``mode`` is ``"stuck"``
+    (pressure pinned at max from now on) or ``"flap"`` (pressure alternates
+    between extremes every tick). Raised by ``fire("controller")`` and
+    *caught* by ``OverloadController.tick`` — control-plane faults degrade
+    the controller, never the engine."""
+
+    def __init__(self, mode: str, msg: str = ""):
+        super().__init__(msg or f"injected controller fault ({mode})")
+        self.mode = mode
 
 
 @dataclasses.dataclass(frozen=True)
@@ -81,6 +107,12 @@ class FaultEvent:
         if self.kind not in KINDS:
             raise ValueError(f"unknown fault kind {self.kind!r} "
                              f"(kinds: {KINDS})")
+        if self.kind in ("stuck", "flap") and self.site != "controller":
+            raise ValueError(f"kind {self.kind!r} is controller-site only "
+                             f"(got site {self.site!r})")
+        if self.site == "controller" and self.kind not in _CONTROLLER_KINDS:
+            raise ValueError(f"controller site accepts kinds "
+                             f"{_CONTROLLER_KINDS}, got {self.kind!r}")
         if self.at < 0:
             raise ValueError(f"fault index must be >= 0, got {self.at}")
 
@@ -140,6 +172,8 @@ class FaultPlan:
             taken[site].add(at)
             if site == "alloc":
                 kind = "oom"
+            elif site == "controller":
+                kind = rng.choice(("stuck", "flap"))
             elif site == "step" and rng.random() < stall_weight:
                 kind = "stall"
             else:
@@ -166,6 +200,8 @@ class FaultPlan:
                + (f" (seed={self.seed})" if self.seed is not None else ""))
         if ev.kind == "oom":
             raise InjectedOOM(msg)
+        if ev.kind in ("stuck", "flap"):
+            raise InjectedControlFault(ev.kind, msg)
         raise InjectedFault(msg)
 
     # -- introspection -------------------------------------------------------

@@ -55,6 +55,9 @@ class ValidationError(ValueError):
         self.param = param
 
 
+PRIORITY_CLASSES = ("interactive", "standard", "batch")
+
+
 @dataclasses.dataclass(frozen=True)
 class CompletionParams:
     """A validated ``/v1/completions`` request body."""
@@ -64,6 +67,12 @@ class CompletionParams:
     stop_ids: Tuple[int, ...]       # generation stops on any of these
     stream: bool
     timeout_s: Optional[float]      # per-request server-side deadline
+    # overload control plane (DESIGN.md Sec. 17): the scheduling class and
+    # an optional soft deadline. The deadline orders admission within a
+    # class (EDF) and protects a nearly-due sequence from preemption; it
+    # never aborts work — `timeout` owns hard cancellation.
+    priority: str = "standard"
+    deadline_ms: Optional[float] = None
 
     @property
     def eos_id(self) -> Optional[int]:
@@ -112,7 +121,10 @@ def parse_completion_request(body, *, vocab_size, default_max_tokens=16,
     engine samples greedily on host and on device — reproducibility is the
     contract; non-zero sampling is a ROADMAP item) and defaults to 0;
     ``stop`` is up to 4 token ids; ``timeout`` (seconds) is an extension,
-    capped at the server's configured maximum."""
+    capped at the server's configured maximum. ``priority``
+    ("interactive" | "standard" | "batch", default "standard") and
+    ``deadline_ms`` (positive, relative to arrival) are the overload
+    control plane's extensions — see DESIGN.md Sec. 17."""
     if not isinstance(body, dict):
         raise ValidationError("request body must be a JSON object")
     if "n" in body and body["n"] != 1:
@@ -161,10 +173,24 @@ def parse_completion_request(body, *, vocab_size, default_max_tokens=16,
     if max_timeout_s is not None:
         timeout_s = min(timeout_s or max_timeout_s, max_timeout_s)
 
+    priority = body.get("priority", "standard")
+    if priority not in PRIORITY_CLASSES:
+        raise ValidationError(
+            f"priority must be one of {list(PRIORITY_CLASSES)}, "
+            f"got {priority!r}", param="priority")
+
+    deadline_ms = body.get("deadline_ms")
+    if deadline_ms is not None:
+        if isinstance(deadline_ms, bool) or \
+                not isinstance(deadline_ms, (int, float)) or deadline_ms <= 0:
+            raise ValidationError("deadline_ms must be a positive number of "
+                                  "milliseconds", param="deadline_ms")
+        deadline_ms = float(deadline_ms)
+
     return CompletionParams(
         prompt=np.asarray(toks, np.int32), max_tokens=max_tokens,
         temperature=float(temperature), stop_ids=stop_ids, stream=stream,
-        timeout_s=timeout_s)
+        timeout_s=timeout_s, priority=priority, deadline_ms=deadline_ms)
 
 
 class RequestLifecycle:

@@ -275,7 +275,9 @@ class ServeMetrics:
         self.host_syncs = r.counter(
             "msb_host_syncs_total", "Blocking device-to-host transfers")
         self.preemptions = r.counter(
-            "msb_preemptions_total", "Sequences evicted for recompute")
+            "msb_preemptions_total",
+            "Sequences evicted for recompute, by priority class",
+            labelnames=("class",))
         self.aborts = r.counter(
             "msb_aborts_total", "Requests cancelled before finishing")
         self.prefix_hits = r.counter(
@@ -336,6 +338,22 @@ class ServeMetrics:
             "msb_recovery_seconds",
             "Wall time of one crash recovery (blame + rebuild), excluding "
             "replay re-prefill")
+        # overload control plane (DESIGN.md Sec. 17)
+        self.admissions = r.counter(
+            "msb_admissions_total",
+            "Requests admitted to a KV slot, by priority class",
+            labelnames=("class",))
+        self.sheds = r.counter(
+            "msb_shed_total",
+            "Requests turned away with 429, by priority class (written by "
+            "the HTTP front door, not synced from the engine)",
+            labelnames=("class",))
+        self.brownout_level = r.gauge(
+            "msb_brownout_level",
+            "Current rung of the overload brownout ladder (0 = normal)")
+        self.brownout_transitions = r.counter(
+            "msb_brownout_transitions_total",
+            "Brownout ladder level changes (either direction)")
         self.health = r.gauge(
             "msb_health_state",
             "One-hot server health (exactly one state is 1)",
@@ -359,7 +377,12 @@ class ServeMetrics:
         self.dispatches.set_to(st["steps"])
         self.decode_dispatches.set_to(st["decode_steps"])
         self.host_syncs.set_to(st["host_syncs"])
-        self.preemptions.set_to(st["preemptions"])
+        # per-class families ratchet from the engine's by-class dicts
+        # (`class` is a keyword, hence the **{} spelling)
+        for c, v in st.get("preemptions_by_class", {}).items():
+            self.preemptions.set_to(v, **{"class": c})
+        for c, v in st.get("admissions_by_class", {}).items():
+            self.admissions.set_to(v, **{"class": c})
         self.aborts.set_to(st["aborts"])
         self.prefix_hits.set_to(st["prefix_hits"])
         self.prefix_positions_saved.set_to(st["prefix_positions_saved"])

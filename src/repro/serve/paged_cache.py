@@ -246,6 +246,17 @@ class PagedKVCache:
             self.registry_epoch += 1
         return freed
 
+    def shrink_lru(self, floor_pages: int) -> int:
+        """Evict LRU-parked prefix pages until at most ``floor_pages``
+        remain parked; returns how many were evicted. The brownout ladder's
+        cache-pressure lever (DESIGN.md Sec. 17): trading cold prefix
+        residency for free pages is host-only bookkeeping — no live
+        sequence is touched and no device state moves — so it is always
+        safe to apply between steps. A no-op when the park is already at
+        or under the floor."""
+        excess = len(self._lru) - max(0, int(floor_pages))
+        return self._reclaim(excess) if excess > 0 else 0
+
     def n_covered_tokens(self, slot) -> int:
         """Token positions ``slot``'s reserved pages can hold — the extent
         of its current lease. A decode-horizon dispatch (DESIGN.md Sec. 12)

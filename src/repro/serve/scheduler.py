@@ -7,9 +7,17 @@ jit trace per work kind) because prefill chunks are a fixed size and decode
 batches are padded to ``max_batch``.
 
 Policy choices (deliberately simple and deterministic; see DESIGN.md §8):
-  * FIFO admission, gated on a whole-sequence capacity check against the
-    page pool (prompt + max_new_tokens must fit) so a lone sequence can
-    never deadlock the pool.
+  * Class-aware admission (DESIGN.md Sec. 17): requests carry a priority
+    class (interactive/standard/batch). Waiting sequences queue per class,
+    EDF-ordered within a class (earliest deadline first, FIFO among
+    deadline-free requests), and the admission head is chosen across
+    classes by rank with weighted aging — a lower-class head that has
+    waited long enough is promoted one class per ``promote_after`` queue
+    events, so batch work can never starve. Admission is still gated on a
+    whole-sequence capacity check against the page pool (prompt +
+    max_new_tokens must fit) so a lone sequence can never deadlock the
+    pool, and still head-blocking: if the selected head does not fit,
+    nothing behind it leapfrogs.
   * Prefill/decode interleaving alternates when both kinds of work exist,
     so a stream of long prompts cannot starve running decodes (and vice
     versa).
@@ -21,9 +29,12 @@ Policy choices (deliberately simple and deterministic; see DESIGN.md §8):
     unwritten when a row stops early stay reserved until the sequence
     finishes or is preempted, and release() returns them either way.
   * Preemption by recompute: when decode needs a page and the pool is dry,
-    the youngest running sequence is evicted — its pages are freed and it
-    re-enters the waiting queue (front) with its generated-so-far tokens
-    appended to the prompt, so greedy output is unchanged. With the prefix
+    the lowest-class-youngest running sequence is evicted — its pages are
+    freed and it re-enters the waiting queue (front of its class) with its
+    generated-so-far tokens appended to the prompt, so greedy output is
+    unchanged. A sequence past its deadline's point of no return (less
+    than half its deadline window remaining) is protected from eviction
+    while any unprotected victim exists. With the prefix
     cache on, ``reserve`` reclaims LRU-cached (unreferenced) prefix pages
     before ever reporting the pool dry, so cached pages are always spent
     before a live sequence is preempted — and a preempted sequence usually
@@ -36,8 +47,9 @@ Policy choices (deliberately simple and deterministic; see DESIGN.md §8):
 from __future__ import annotations
 
 import dataclasses
-from collections import deque
-from typing import Deque, Dict, List, Optional, Tuple
+import math
+import time
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -45,13 +57,21 @@ from .paged_cache import OutOfPages, PagedKVCache
 
 PREFILL, DECODE, FINISHED = "prefill", "decode", "finished"
 
+# Priority classes, best first. Rank is the admission sort key; the
+# weighted-aging promotion in _WaitingQueue keeps the worst class from
+# starving, and the brownout ladder (serve/overload.py) sheds from the
+# worst class first.
+CLASSES = ("interactive", "standard", "batch")
+CLASS_RANK: Dict[str, int] = {c: i for i, c in enumerate(CLASSES)}
+
 
 class Saturated(RuntimeError):
     """A submit was refused for *transient* load reasons (waiting queue
-    full, page pool oversubscribed) — distinct from the permanent
-    ``ValueError`` a request that can *never* fit gets. Callers should shed
-    load (HTTP 429 + Retry-After) and may retry the identical request
-    later. Only raised when backpressure is enabled (``max_waiting=``)."""
+    full, page pool oversubscribed, brownout shedding) — distinct from the
+    permanent ``ValueError`` a request that can *never* fit gets. Callers
+    should shed load (HTTP 429 + Retry-After) and may retry the identical
+    request later. Only raised when backpressure is enabled
+    (``max_waiting=``) or a brownout level sheds the request's class."""
 
 
 @dataclasses.dataclass
@@ -60,6 +80,113 @@ class Request:
     prompt: np.ndarray            # (P,) int32
     max_new_tokens: int
     eos_id: Optional[int] = None
+    # priority class ("interactive" | "standard" | "batch"): admission
+    # order, preemption-victim order, and brownout shedding all key on it
+    priority: str = "standard"
+    # absolute monotonic deadline (seconds, time.monotonic() domain), or
+    # None. Deadlines order admission within a class (EDF) and protect a
+    # nearly-due sequence from preemption; they never abort work — the
+    # lifecycle timeout owns hard cancellation.
+    deadline: Optional[float] = None
+    submitted_at: Optional[float] = None   # monotonic stamp, set at submit
+
+
+class _WaitingQueue:
+    """Per-class admission queues behind a deque-compatible facade.
+
+    Within a class, entries are EDF-ordered: sorted by (deadline, arrival),
+    deadline-free requests after deadlined ones, FIFO among themselves.
+    ``appendleft`` (preemption re-entry) pins the sequence to the front of
+    its class — a preempted sequence has head-of-line rights that a later
+    arrival with an earlier deadline must not jump.
+
+    Across classes, the logical head is chosen by *effective rank*:
+    ``CLASS_RANK - waited // promote_after``, where ``waited`` counts queue
+    events (appends + admissions) since the entry joined — deterministic,
+    no wall clock. A batch request that has sat through ``promote_after``
+    events competes as standard, through ``2*promote_after`` as
+    interactive: bounded starvation by construction. Ties break by class
+    rank, then EDF key.
+
+    Only the deque operations the scheduler and engine actually use are
+    implemented (append/appendleft/popleft/remove/len/bool/iter/[0])."""
+
+    def __init__(self, promote_after: int = 8):
+        self.promote_after = max(1, int(promote_after))
+        self._q: Dict[str, List["Sequence"]] = {c: [] for c in CLASSES}
+        self._clock = 0
+
+    def __len__(self):
+        return sum(len(q) for q in self._q.values())
+
+    def __bool__(self):
+        return any(self._q.values())
+
+    def __iter__(self):
+        for c in CLASSES:
+            yield from self._q[c]
+
+    @staticmethod
+    def _edf_key(seq: "Sequence"):
+        d = seq.req.deadline
+        return (d if d is not None else math.inf, seq._queue_seq)
+
+    def _select_class(self) -> Optional[str]:
+        best = None
+        for c in CLASSES:
+            q = self._q[c]
+            if not q:
+                continue
+            head = q[0]
+            waited = self._clock - head._enq_clock
+            eff = CLASS_RANK[c] - waited // self.promote_after
+            key = (eff, CLASS_RANK[c], self._edf_key(head))
+            if best is None or key < best[0]:
+                best = (key, c)
+        return None if best is None else best[1]
+
+    def append(self, seq: "Sequence"):
+        self._clock += 1
+        seq._queue_seq = self._clock
+        seq._enq_clock = self._clock
+        q = self._q[seq.req.priority]
+        key = self._edf_key(seq)
+        i = len(q)
+        while i > 0 and not q[i - 1]._hol and self._edf_key(q[i - 1]) > key:
+            i -= 1
+        q.insert(i, seq)
+
+    def appendleft(self, seq: "Sequence"):
+        # preemption re-entry: front of class, ahead of EDF order; keep the
+        # original enqueue clock so accumulated aging credit survives
+        seq._hol = True
+        if seq._enq_clock is None:
+            self._clock += 1
+            seq._queue_seq = seq._enq_clock = self._clock
+        self._q[seq.req.priority].insert(0, seq)
+
+    def popleft(self) -> "Sequence":
+        c = self._select_class()
+        if c is None:
+            raise IndexError("pop from an empty waiting queue")
+        self._clock += 1
+        seq = self._q[c].pop(0)
+        seq._hol = False
+        return seq
+
+    def remove(self, seq: "Sequence"):
+        self._q[seq.req.priority].remove(seq)   # ValueError when absent
+
+    def __getitem__(self, i):
+        if i != 0:
+            raise IndexError("_WaitingQueue only exposes the head ([0])")
+        c = self._select_class()
+        if c is None:
+            raise IndexError("waiting queue is empty")
+        return self._q[c][0]
+
+    def depth(self, priority: str) -> int:
+        return len(self._q[priority])
 
 
 class Sequence:
@@ -74,6 +201,11 @@ class Sequence:
         self.n_preempted = 0
         self._prefix_match = None   # (registry_epoch, match) memo
         self._tokens_memo = None    # (len(generated), array) memo
+        # _WaitingQueue bookkeeping: arrival order, aging epoch, and the
+        # head-of-line pin a preempted sequence re-enters with
+        self._queue_seq = 0
+        self._enq_clock: Optional[int] = None
+        self._hol = False
 
     @property
     def tokens(self) -> np.ndarray:
@@ -111,11 +243,22 @@ class Scheduler:
                  prefill_chunk: int, decode_horizon: int = 1,
                  max_waiting: Optional[int] = None,
                  oversubscribe: float = 2.0,
-                 prefill_buckets: Optional[Tuple[int, ...]] = None):
+                 prefill_buckets: Optional[Tuple[int, ...]] = None,
+                 promote_after: int = 8):
         self.cache = cache
         self.max_batch = max_batch
         self.prefill_chunk = prefill_chunk
         self.decode_horizon = int(decode_horizon)
+        # brownout knobs (serve/overload.py writes these, always on the
+        # engine thread). All three are schedule-only: they change which
+        # work is dispatched and how much of it, never the jitted shapes —
+        # horizon_cap clamps the *dynamic* per-dispatch token budget under
+        # the same static-horizon trace, max_wave_segments packs fewer
+        # segments into the same (already-warmed) buckets, shed_classes
+        # turns submits of the named classes into Saturated.
+        self.horizon_cap: Optional[int] = None
+        self.max_wave_segments: Optional[int] = None
+        self.shed_classes: frozenset = frozenset()
         # packed ragged prefill (DESIGN.md Sec. 16): when a bucket set is
         # given, schedule() bins every waiting PREFILL sequence's next chunk
         # into ONE dispatch padded to the smallest covering bucket; None
@@ -131,7 +274,7 @@ class Scheduler:
         self.max_waiting = max_waiting if max_waiting is None \
             else int(max_waiting)
         self.oversubscribe = float(oversubscribe)
-        self.waiting: Deque[Sequence] = deque()
+        self.waiting = _WaitingQueue(promote_after=promote_after)
         self.running: List[Sequence] = []
         self._last_was_prefill = False
         self.n_preemptions = 0
@@ -140,24 +283,37 @@ class Scheduler:
         self.n_aborts = 0             # requests cancelled before finishing
         self.n_prefix_hits = 0        # admissions that matched the registry
         self.n_prefix_tokens = 0      # positions adopted instead of prefilled
+        # per-class observability (msb_*_total{class=} in serve/metrics.py)
+        self.n_preemptions_by_class = {c: 0 for c in CLASSES}
+        self.n_admissions_by_class = {c: 0 for c in CLASSES}
+        self.n_sheds_by_class = {c: 0 for c in CLASSES}
         # one queue-depth sample per admission wave (NOT per prefill chunk:
         # a long prompt's chunks would otherwise re-report the same depth
         # dozens of times and skew the distribution); drained by the engine
         self.queue_depth_obs: List[int] = []
 
     # -- queue entry points -------------------------------------------------
-    def would_accept(self, n_tokens: int) -> Optional[Exception]:
+    def would_accept(self, n_tokens: int,
+                     priority: str = "standard") -> Optional[Exception]:
         """Cheap, mutation-free admission probe for ``n_tokens`` (prompt +
-        max_new_tokens). Returns ``None`` when a ``submit`` issued right now
-        would be accepted, otherwise the exception instance a submit would
-        raise: ``ValueError`` for permanent infeasibility (the request can
-        never fit this pool) or ``Saturated`` for transient backpressure
-        (retry later). A server front door calls this before mutating any
-        state so a 429/400 costs no allocator work; ``submit`` re-checks,
-        so the probe->submit race is benign."""
+        max_new_tokens) at ``priority``. Returns ``None`` when a ``submit``
+        issued right now would be accepted, otherwise the exception instance
+        a submit would raise: ``ValueError`` for permanent infeasibility
+        (the request can never fit this pool, or the priority class is
+        unknown) or ``Saturated`` for transient backpressure or brownout
+        shedding (retry later). A server front door calls this before
+        mutating any state so a 429/400 costs no allocator work; ``submit``
+        re-checks, so the probe->submit race is benign."""
+        if priority not in CLASS_RANK:
+            return ValueError(f"unknown priority class {priority!r} "
+                              f"(expected one of {CLASSES})")
         why = self.cache.capacity_error(n_tokens)
         if why is not None:
             return ValueError(why)
+        if priority in self.shed_classes:
+            return Saturated(
+                f"{priority}-class requests are shed under brownout "
+                "(transient overload; retry later)")
         if self.max_waiting is None:
             return None                       # backpressure disabled
         if len(self.waiting) >= self.max_waiting:
@@ -193,9 +349,13 @@ class Scheduler:
             raise ValueError(f"request {request.req_id}: prompt must not "
                              "be empty (nothing to prefill)")
         total = len(request.prompt) + request.max_new_tokens
-        err = self.would_accept(total)
+        err = self.would_accept(total, priority=request.priority)
         if err is not None:        # names the limit that actually rejected
+            if isinstance(err, Saturated):
+                self.n_sheds_by_class[request.priority] += 1
             raise type(err)(f"request {request.req_id}: {err}")
+        if request.submitted_at is None:
+            request.submitted_at = time.monotonic()
         seq = Sequence(request)
         self.waiting.append(seq)
         return seq
@@ -229,7 +389,9 @@ class Scheduler:
 
     # -- internals ----------------------------------------------------------
     def _admit(self):
-        """FIFO admission while slots, batch room, and pool headroom last.
+        """Class-ordered admission while slots, batch room, and pool
+        headroom last (the _WaitingQueue head: class rank with aging
+        promotion, EDF within a class).
         Headroom check is against the *whole* remaining sequence so an
         admitted sequence only ever blocks on pages another sequence can
         release (preemption handles that case); it counts LRU-cached prefix
@@ -257,6 +419,7 @@ class Scheduler:
                 break
             self.waiting.popleft()
             self.n_admissions += 1
+            self.n_admissions_by_class[seq.req.priority] += 1
             seq.slot = self.cache.alloc_slot()
             seq.cache_len = 0
             if match is not None:
@@ -297,31 +460,73 @@ class Scheduler:
         self.running.remove(victim)
         self.waiting.appendleft(victim)
         self.n_preemptions += 1
+        self.n_preemptions_by_class[victim.req.priority] += 1
+
+    @staticmethod
+    def _past_point_of_no_return(seq, now: float) -> bool:
+        """A deadlined sequence is past its point of no return once less
+        than half its original deadline window remains: preempting it then
+        (recompute-on-resume re-prefills everything generated so far) would
+        all but guarantee a deadline miss, so the victim picker protects it
+        while any unprotected candidate exists. Deadline-free sequences are
+        never protected."""
+        d = seq.req.deadline
+        if d is None:
+            return False
+        sub = seq.req.submitted_at
+        if sub is None or d <= sub:
+            return now >= d
+        return (d - now) < 0.5 * (d - sub)
+
+    def _pick_victim(self, now: Optional[float] = None):
+        """Lowest-class-youngest victim: among running sequences not past
+        their deadline's point of no return, take the worst priority class,
+        breaking ties by highest req_id (youngest). Protection is
+        best-effort — if *every* running sequence is protected the pool
+        still has to make progress, so the pick falls back to all of them."""
+        now = time.monotonic() if now is None else now
+        candidates = [s for s in self.running
+                      if not self._past_point_of_no_return(s, now)]
+        if not candidates:
+            candidates = self.running
+        return max(candidates,
+                   key=lambda s: (CLASS_RANK[s.req.priority], s.req.req_id))
 
     def _reserve_or_preempt(self, seq, n_tokens) -> bool:
-        """Reserve pages for ``seq``, evicting youngest-first until it fits.
-        ``seq`` itself is evicted if it is the youngest (never steal pages
-        from an older sequence); returns False in that case."""
+        """Reserve pages for ``seq``, evicting lowest-class-youngest-first
+        until it fits. ``seq`` itself is evicted if it is the chosen victim
+        (never steal pages from a better-ranked sequence); returns False in
+        that case."""
         while True:
             try:
                 self.cache.reserve(seq.slot, n_tokens)
                 return True
             except OutOfPages:
-                victim = max(self.running, key=lambda s: s.req.req_id)
+                victim = self._pick_victim()
                 self._preempt(victim)
                 if victim is seq:
                     return False
 
+    @property
+    def effective_horizon(self) -> int:
+        """Decode-horizon token budget per dispatch, after the brownout
+        clamp. The *static* trace horizon never changes — a cap only lowers
+        the dynamic ``n_left`` budget the device sees, so a capped dispatch
+        runs the same compiled scan and just retires fewer tokens."""
+        if self.horizon_cap is None:
+            return self.decode_horizon
+        return max(1, min(self.decode_horizon, int(self.horizon_cap)))
+
     def _decode_lease(self, seq) -> int:
         """Token positions the next decode dispatch may write for ``seq``:
-        a horizon dispatch samples up to ``min(decode_horizon, remaining
+        a horizon dispatch samples up to ``min(effective_horizon, remaining
         budget)`` tokens, writing K/V for each input token starting at
         ``n_total - 1``, so the lease covers ``n_total - 1 + h`` positions.
         Reserving the whole lease up front is what lets the device cross
         page boundaries mid-horizon with no host intervention (the block
         table already addresses every reserved page). ``decode_horizon=1``
         degenerates to the classic one-position reserve (``n_total``)."""
-        h = min(self.decode_horizon,
+        h = min(self.effective_horizon,
                 seq.req.max_new_tokens - len(seq.generated))
         return seq.n_total - 1 + max(h, 1)
 
@@ -370,8 +575,17 @@ class Scheduler:
         budget = self.prefill_buckets[-1]
         # crash isolation (set by the supervisor after a crash blamed on a
         # multi-segment packed dispatch): pack one segment per wave so
-        # blame — and poison quarantine — stays per-request precise
-        max_segs = 1 if self.isolate_prefill else self.max_batch
+        # blame — and poison quarantine — stays per-request precise.
+        # max_wave_segments is the brownout wave-width cap: fewer segments
+        # per wave means a smaller covering bucket, and every bucket is
+        # already warmed, so the cap never introduces a new trace.
+        if self.isolate_prefill:
+            max_segs = 1
+        elif self.max_wave_segments is not None:
+            max_segs = max(1, min(self.max_batch,
+                                  int(self.max_wave_segments)))
+        else:
+            max_segs = self.max_batch
         segs: List[Tuple[Sequence, int, int]] = []
         used = 0
         for seq in list(self.running):

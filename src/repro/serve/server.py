@@ -45,7 +45,6 @@ from __future__ import annotations
 
 import asyncio
 import json
-import math
 import queue
 import threading
 import time
@@ -56,6 +55,7 @@ from .lifecycle import (DONE, FINISH_CANCELLED, FINISH_ERROR, FINISH_LENGTH,
                         FINISH_STOP, FINISH_TIMEOUT, RequestLifecycle,
                         ValidationError, parse_completion_request)
 from .metrics import Registry, ServeMetrics
+from .overload import OverloadController, compute_retry_after
 from .scheduler import Saturated
 from .supervisor import DEAD, DEGRADED, DRAINING, OK, WARMING, Draining, \
     EngineDied, Recovering, Warming
@@ -98,12 +98,17 @@ class EngineLoop:
     def __init__(self, engine, metrics: Optional[ServeMetrics] = None,
                  detokenize: Optional[Callable[[int], str]] = None,
                  idle_poll_s: float = 0.05, faults=NO_FAULTS,
-                 max_detok_restarts: int = 3, warmup: bool = False):
+                 max_detok_restarts: int = 3, warmup: bool = False,
+                 overload: Optional[OverloadController] = None):
         self.engine = engine
         self.metrics = metrics or ServeMetrics()
         self.detokenize = detokenize or default_detokenize
         self.idle_poll_s = idle_poll_s
         self.faults = faults
+        # overload control plane (DESIGN.md Sec. 17): ticked once per loop
+        # iteration on this thread — the controller mutates scheduler/cache
+        # state under the same single-writer discipline as the engine
+        self.overload = overload
         self.warmup_requested = bool(warmup)
         self.warming = False           # startup AOT warmup in flight
         self.max_detok_restarts = int(max_detok_restarts)
@@ -169,7 +174,8 @@ class EngineLoop:
         return (self.draining
                 and not self.engine.has_work and not self._by_rid)
 
-    def probe(self, prompt_len: int, max_tokens: int) -> Optional[Exception]:
+    def probe(self, prompt_len: int, max_tokens: int,
+              priority: str = "standard") -> Optional[Exception]:
         """Read-only admission probe (safe off-thread: counters only; the
         engine-thread submit re-validates, so staleness costs one retry,
         never corrupted state)."""
@@ -181,7 +187,8 @@ class EngineLoop:
         if self.warming:
             return Warming("engine is warming up (compiling the trace "
                            "set); retry shortly")
-        return self.engine.would_accept(prompt_len, max_tokens)
+        return self.engine.would_accept(prompt_len, max_tokens,
+                                        priority=priority)
 
     def submit(self, lc: RequestLifecycle) -> asyncio.Future:
         """Enqueue a validated request; returns a future (on the caller's
@@ -223,6 +230,8 @@ class EngineLoop:
                 self._check_deadlines(time.monotonic())
                 self._ensure_detok()
                 self.metrics.sync_engine(self.engine)
+                if self.overload is not None:
+                    self.overload.tick()
         except BaseException as e:
             # an unsupervised engine's step() crashing lands here (a
             # supervised one contains it); record the cause so probe/
@@ -315,7 +324,8 @@ class EngineLoop:
             if self.draining:                   # raced the drain flag
                 raise Draining("server is draining; not accepting work")
             rid = self.engine.submit(p.prompt, p.max_tokens,
-                                     eos_id=p.eos_id)
+                                     eos_id=p.eos_id, priority=p.priority,
+                                     deadline_ms=p.deadline_ms)
         except Exception as e:                  # probe->submit race
             lc.loop.call_soon_threadsafe(_set_future, fut, e)
             return
@@ -428,7 +438,7 @@ class APIServer:
                  default_max_tokens: int = 16, max_tokens_cap: int = 2048,
                  max_timeout_s: Optional[float] = None,
                  retry_after_s: float = 1.0, faults=NO_FAULTS,
-                 warmup: bool = False):
+                 warmup: bool = False, overload=False):
         self.host, self.port = host, port
         model = getattr(engine, "engine", engine).model  # unwrap supervisor
         self.model_name = model_name or model.cfg.name
@@ -442,6 +452,23 @@ class APIServer:
                                       detokenize=detokenize, faults=faults,
                                       warmup=warmup)
         self.metrics = self.engine_loop.metrics
+        # overload control plane (DESIGN.md Sec. 17): pass overload=True
+        # for the default brownout ladder, a dict of OverloadController
+        # kwargs to tune it, or a prebuilt controller. The engine loop
+        # ticks it; rejections and /healthz read it.
+        self.overload: Optional[OverloadController] = None
+        if overload:
+            if isinstance(overload, OverloadController):
+                self.overload = overload
+            elif isinstance(overload, dict):
+                self.overload = OverloadController(
+                    engine, self.metrics,
+                    retry_after_base_s=retry_after_s, **overload)
+            else:
+                self.overload = OverloadController(
+                    engine, self.metrics, retry_after_base_s=retry_after_s)
+            self.engine_loop.overload = self.overload
+        self._retry_salt = 0          # deterministic Retry-After jitter key
         self._loop: Optional[asyncio.AbstractEventLoop] = None
         self._shutdown: Optional[asyncio.Event] = None
         self._thread: Optional[threading.Thread] = None
@@ -580,7 +607,9 @@ class APIServer:
                 f"{method} not allowed on {path}", "protocol_error"))
         if path == "/healthz":
             health = self.engine_loop.health
-            body = {"status": health, "model": self.model_name}
+            body = {"status": health, "model": self.model_name,
+                    "brownout_level":
+                        self.overload.level if self.overload else 0}
             stats = getattr(self.engine_loop.engine, "stats", None)
             if stats is not None:
                 st = stats()
@@ -594,9 +623,7 @@ class APIServer:
                 return await self._send_json(writer, 200, body)
             extra = ()
             if health == WARMING:
-                extra = ((b"Retry-After",
-                          str(int(math.ceil(self.retry_after_s)))
-                          .encode()),)
+                extra = self._retry_after_header()
             return await self._send_json(writer, 503, body, extra=extra)
         if path == "/v1/models":
             return await self._send_json(writer, 200, {
@@ -636,12 +663,13 @@ class APIServer:
             return await self._send_json(writer, 400, _err(
                 str(e), "invalid_request_error", param=e.param))
 
-        err = self.engine_loop.probe(len(params.prompt), params.max_tokens)
+        err = self.engine_loop.probe(len(params.prompt), params.max_tokens,
+                                     priority=params.priority)
         if err is None:
             lc = RequestLifecycle(params, metrics=self.metrics)
             err = await self.engine_loop.submit(lc)
         if err is not None:
-            return await self._reject(writer, err)
+            return await self._reject(writer, err, params)
 
         watcher = asyncio.ensure_future(self._watch_disconnect(reader, lc))
         try:
@@ -652,12 +680,31 @@ class APIServer:
         finally:
             watcher.cancel()
 
-    async def _reject(self, writer, err: Exception):
-        retry = ((b"Retry-After",
-                  str(int(math.ceil(self.retry_after_s))).encode()),)
+    def _retry_after_value(self) -> int:
+        """The one Retry-After computation (satellite: previously the
+        saturation 429, warming 503 and recovery 503 paths each derived
+        their own constant). With a controller attached the value scales
+        with observed pressure and brownout level; without one it is the
+        configured base with deterministic per-response jitter so
+        synchronized clients don't re-arrive in lockstep."""
+        if self.overload is not None:
+            return self.overload.retry_after()
+        self._retry_salt += 1
+        return compute_retry_after(self.retry_after_s,
+                                   salt=self._retry_salt)
+
+    def _retry_after_header(self):
+        return ((b"Retry-After", str(self._retry_after_value()).encode()),)
+
+    async def _reject(self, writer, err: Exception, params=None):
+        retry = self._retry_after_header()
         if isinstance(err, Saturated):
-            # transient *capacity* condition: back off and retry (429)
+            # transient *capacity* condition: back off and retry (429).
+            # Brownout sheds land here too — count them by class so the
+            # shed fraction per priority is observable.
             self.metrics.requests.inc(outcome="saturated")
+            if params is not None:
+                self.metrics.sheds.inc(**{"class": params.priority})
             return await self._send_json(
                 writer, 429, _err(f"server saturated, retry later: {err}",
                                   "overloaded_error"), extra=retry)

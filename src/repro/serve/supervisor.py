@@ -120,13 +120,18 @@ class _SupReq:
 
     __slots__ = ("rid", "prompt", "max_new_tokens", "eos_id", "tokens",
                  "engine_rid", "crashes", "finished", "aborted", "error",
-                 "reported_done", "stream_off")
+                 "reported_done", "stream_off", "priority", "deadline_at")
 
-    def __init__(self, rid, prompt, max_new_tokens, eos_id):
+    def __init__(self, rid, prompt, max_new_tokens, eos_id,
+                 priority="standard", deadline_at=None):
         self.rid = rid
         self.prompt = np.asarray(prompt, np.int32).reshape(-1)
         self.max_new_tokens = int(max_new_tokens)
         self.eos_id = eos_id
+        # replay passes the *absolute* deadline through: a crash must not
+        # grant a request extra EDF slack
+        self.priority = priority
+        self.deadline_at = deadline_at
         self.tokens: List[int] = []
         self.engine_rid: Optional[int] = None   # id in the current engine
         self.crashes = 0                        # times blamed for a crash
@@ -200,7 +205,10 @@ class EngineSupervisor:
         # monotonic counters accumulated across incarnations (an engine's
         # own counters reset when it is rebuilt; metrics must not regress)
         self._base = {k: 0 for k in _ENGINE_COUNTERS}
+        self._base_dicts: Dict[str, Dict[str, int]] = {
+            k: {} for k in _ENGINE_DICT_COUNTERS}
         self._aborts_extra = 0      # aborts of pending-replay requests
+        self._overload = None       # OverloadController, if attached
         self.n_restarts = 0
         self.n_watchdog_trips = 0
         self.n_replayed_tokens = 0
@@ -222,7 +230,8 @@ class EngineSupervisor:
             return DEGRADED
         return OK
 
-    def would_accept(self, prompt_len, max_new_tokens):
+    def would_accept(self, prompt_len, max_new_tokens,
+                     priority="standard"):
         """Read-only admission probe, safe off-thread. Beyond the engine's
         own answers (``None`` / ``ValueError`` / ``Saturated``) this adds
         ``Draining`` (shutting down, 503) and ``Recovering`` (mid-rebuild
@@ -239,19 +248,29 @@ class EngineSupervisor:
         if self._recovering or self._pending_replay:
             return Recovering("engine is recovering from a crash; "
                               "retry shortly")
-        return self.engine.would_accept(prompt_len, max_new_tokens)
+        return self.engine.would_accept(prompt_len, max_new_tokens,
+                                        priority=priority)
 
-    def submit(self, prompt, max_new_tokens, eos_id=None) -> int:
+    def submit(self, prompt, max_new_tokens, eos_id=None,
+               priority="standard", deadline_ms=None,
+               deadline_at=None) -> int:
         """Mirror of ``ContinuousEngine.submit`` with a supervisor-owned
-        request id (stable across engine rebuilds)."""
+        request id (stable across engine rebuilds). A relative
+        ``deadline_ms`` is resolved to an absolute ``deadline_at`` here,
+        once — replay after a crash passes the absolute value through, so
+        recovery never extends a request's EDF slack."""
         err = self._gate()
         if err is not None:
             raise err
-        sr = _SupReq(self._next_rid, prompt, max_new_tokens, eos_id)
+        if deadline_at is None and deadline_ms is not None:
+            deadline_at = time.monotonic() + float(deadline_ms) / 1000.0
+        sr = _SupReq(self._next_rid, prompt, max_new_tokens, eos_id,
+                     priority=priority, deadline_at=deadline_at)
         # engine submit first: if it rejects (Saturated/ValueError) the
         # supervisor records nothing
         erid = self.engine.submit(sr.prompt, sr.max_new_tokens,
-                                  eos_id=eos_id)
+                                  eos_id=eos_id, priority=priority,
+                                  deadline_at=deadline_at)
         self._next_rid += 1
         sr.engine_rid = erid
         self._reqs[sr.rid] = sr
@@ -271,6 +290,15 @@ class EngineSupervisor:
             return Recovering("engine is recovering from a crash; "
                               "retry shortly")
         return None
+
+    def attach_overload(self, controller):
+        """Register the overload controller so rebuilt incarnations
+        inherit the current brownout level: the controller holds the
+        level, engine incarnations only hold its consequences
+        (scheduler knobs), and ``_recover`` re-applies them before the
+        fresh engine dispatches anything — no flapping across crashes.
+        Called by ``OverloadController.__init__``."""
+        self._overload = controller
 
     def warmup(self):
         """AOT-warm the current incarnation's reachable trace set
@@ -383,6 +411,11 @@ class EngineSupervisor:
                 # prefill: pack one segment per wave from here on so blame
                 # (and poison quarantine) is per-request precise
                 self.engine.scheduler.isolate_prefill = True
+            if self._overload is not None:
+                # the rebuilt incarnation inherits the brownout level the
+                # controller holds — recovery under overload must not
+                # briefly serve at level 0 (flap) before the next tick
+                self._overload.apply_to(self.engine)
             if self._warmed:
                 self._warming = True
                 try:
@@ -462,7 +495,9 @@ class EngineSupervisor:
                 continue
             try:
                 erid = self.engine.submit(prompt, remaining,
-                                          eos_id=sr.eos_id)
+                                          eos_id=sr.eos_id,
+                                          priority=sr.priority,
+                                          deadline_at=sr.deadline_at)
             except Saturated:
                 still_pending.append(rid)
                 continue
@@ -574,6 +609,10 @@ class EngineSupervisor:
         st = engine.stats()
         for k in _ENGINE_COUNTERS:
             self._base[k] += st[k]
+        for k in _ENGINE_DICT_COUNTERS:
+            base = self._base_dicts[k]
+            for c, v in st.get(k, {}).items():
+                base[c] = base.get(c, 0) + v
 
     def stats(self) -> Dict[str, object]:
         """Aggregated monotonic counters across every incarnation, plus
@@ -582,6 +621,11 @@ class EngineSupervisor:
         .sync_engine`` consumes either."""
         st = self.engine.stats()
         out = {k: self._base[k] + st[k] for k in _ENGINE_COUNTERS}
+        for k in _ENGINE_DICT_COUNTERS:
+            merged = dict(self._base_dicts[k])
+            for c, v in st.get(k, {}).items():
+                merged[c] = merged.get(c, 0) + v
+            out[k] = merged
         out["aborts"] += self._aborts_extra
         out["queue_depth"] = st["queue_depth"] + len(self._pending_replay)
         out["running"] = st["running"]
@@ -619,6 +663,11 @@ _ENGINE_COUNTERS = ("tokens_out", "steps", "decode_steps", "host_syncs",
                     "prefix_hits", "prefix_positions_saved", "forks",
                     "prefill_dispatches", "prefill_segments",
                     "admission_waves", "warmup_seconds", "warmup_traces")
+
+# per-priority-class dict counters (overload control plane), folded across
+# incarnations the same way the scalar counters are
+_ENGINE_DICT_COUNTERS = ("preemptions_by_class", "admissions_by_class",
+                         "sheds_by_class")
 
 
 class _StepWorker:

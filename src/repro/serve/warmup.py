@@ -23,6 +23,13 @@ After ``warm_engine`` returns, a serving run that stays inside the
 config's shape envelope performs zero new traces — the property the
 trace-count probe (``continuous.jit_trace_count``) lets tests and the
 ``msb_traces_compiled_total`` metric assert.
+
+The overload brownout ladder (``serve.overload``, DESIGN.md Sec. 17)
+preserves this: its horizon cap is a *dynamic* clamp on the per-sequence
+token budget (the static horizon-scan trace is untouched) and its wave
+cap only shrinks the segment count, which selects a smaller —
+already-warmed — covering bucket. Level changes therefore never add to
+the reachable trace set enumerated here.
 """
 from __future__ import annotations
 
